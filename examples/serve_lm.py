@@ -1,0 +1,41 @@
+"""Serving example: batched prefill + greedy decode with per-family caches.
+
+Loads three reduced archs — a GQA transformer (qwen), the MLA+MoE family
+(deepseek, compressed latent cache) and the attention-free rwkv6 (O(1)
+state) — and generates continuations for a batch of prompts, demonstrating
+that one serving API covers every cache kind in the zoo.
+
+Run:  PYTHONPATH=src python examples/serve_lm.py
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ARCHS
+from repro.models import init_params, model_spec
+from repro.train.serve import greedy_generate
+
+BATCH, PROMPT, NEW = 4, 24, 8
+
+for arch in ("qwen2.5-3b", "deepseek-v2-236b", "rwkv6-3b"):
+    cfg = ARCHS[arch].reduced()
+    if cfg.n_experts:
+        cfg = dataclasses.replace(cfg, capacity_factor=4.0)
+    params = init_params(model_spec(cfg), jax.random.PRNGKey(0))
+    prompts = jnp.asarray(
+        np.random.default_rng(1).integers(0, cfg.vocab, (BATCH, PROMPT)),
+        jnp.int32)
+    out = greedy_generate(params, cfg, prompts, max_new=NEW,
+                          max_len=PROMPT + NEW + 1)
+    assert out.shape == (BATCH, NEW)
+    assert bool(jnp.all((out >= 0) & (out < cfg.vocab_padded)))
+    kinds = {"qwen2.5-3b": "KV cache", "deepseek-v2-236b":
+             "MLA latent cache (576/token vs 32768 dense)",
+             "rwkv6-3b": "O(1) recurrent state"}
+    print(f"{arch:22s} -> generated {out.shape} via {kinds[arch]}")
+    print(f"{'':22s}    first row: {np.asarray(out[0]).tolist()}")
+
+print("\nserve_lm OK — one decode API, three cache families")

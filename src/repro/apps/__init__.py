@@ -1,0 +1,5 @@
+"""repro.apps — end-to-end applications built on the TinyCL runtime."""
+
+from .tinybio import TINYBIO_WORKLOAD, run_tinybio, tinybio_stages
+
+__all__ = ["TINYBIO_WORKLOAD", "run_tinybio", "tinybio_stages"]

@@ -1,0 +1,116 @@
+"""TinyBio — the paper's 4-stage biosignal pipeline (MBio-Tracker, Fig 4).
+
+    raw signal → FIR band-pass → delineation (peaks/troughs)
+               → Stockham-FFT spectral features (+ time features)
+               → SVM cognitive-workload decision
+
+Workload (fixed, documented in EXPERIMENTS.md §Paper-validation): a 65536-
+sample int16 recording (≈ 34 min of respiration @ 32 Hz), 128-tap FIR,
+spectral features over 128 windows of 512 samples, SVM over 256 support
+vectors x 32 features.  With this workload the analytic machine model
+reproduces the paper's Fig-4 bands within ±15 % on every stage
+(tests/test_paper_validation.py pins them).
+
+Every stage runs functionally (Pallas kernels on TPU, interpret/XLA on CPU)
+AND is costed by the machine model — the APU report carries both.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core import APU, EGPUConfig, EGPU_16T, Kernel, Stage
+from ..kernels.delineate import ops as delineate_ops
+from ..kernels.delineate.ref import counts as delineate_counts
+from ..kernels.fir import ops as fir_ops
+from ..kernels.fir.ref import counts as fir_counts
+from ..kernels.stockham_fft import ops as fft_ops
+from ..kernels.stockham_fft.ref import counts as fft_counts
+from ..kernels.svm import ops as svm_ops
+from ..kernels.svm.ref import counts as svm_counts
+
+TINYBIO_WORKLOAD = dict(n=65_536, taps=128, win=512, n_windows=128,
+                        n_sv=256, n_features=36)   # 32 bands + 4 stats
+
+
+def synth_signal(n: int, seed: int = 0) -> np.ndarray:
+    """Synthetic respiration-like signal: slow oscillation + drift + noise."""
+    rng = np.random.default_rng(seed)
+    t = np.arange(n) / 32.0
+    breath = np.sin(2 * np.pi * 0.25 * t) + 0.3 * np.sin(2 * np.pi * 0.08 * t)
+    sig = breath + 0.1 * rng.standard_normal(n)
+    return np.asarray(sig, np.float32)
+
+
+def _feature_kernel(win: int, n_windows: int):
+    """Stage 3: windowed power-spectrum features + time-domain stats."""
+    def features(x: jax.Array, flags: jax.Array) -> jax.Array:
+        w = x[: win * n_windows].reshape(n_windows, win)
+        spec = jax.vmap(fft_ops.power_spectrum)(w)          # (NW, win)
+        nf = TINYBIO_WORKLOAD["n_features"]
+        bands = spec[:, :win // 2].reshape(n_windows, nf - 4, -1).mean(-1)
+        mean = w.mean(axis=1, keepdims=True)
+        rms = jnp.sqrt((w * w).mean(axis=1, keepdims=True))
+        peaks = (flags[: win * n_windows].reshape(n_windows, win) > 0
+                 ).sum(axis=1, keepdims=True).astype(jnp.float32)
+        troughs = (flags[: win * n_windows].reshape(n_windows, win) < 0
+                   ).sum(axis=1, keepdims=True).astype(jnp.float32)
+        feats = jnp.concatenate([bands, mean, rms, peaks, troughs], axis=1)
+        # normalize for the RBF kernel
+        return feats / (jnp.abs(feats).max(axis=0, keepdims=True) + 1e-6)
+    return features
+
+
+def tinybio_stages(config: EGPUConfig = EGPU_16T, seed: int = 0):
+    """(stages, inputs) for :meth:`repro.core.APU.offload`."""
+    wl = TINYBIO_WORKLOAD
+    n, taps, win, nw = wl["n"], wl["taps"], wl["win"], wl["n_windows"]
+    rng = np.random.default_rng(seed + 1)
+    h = np.asarray(np.hamming(taps) * np.sinc(np.linspace(-4, 4, taps)),
+                   np.float32)
+    h /= np.abs(h).sum()
+    sv = np.asarray(rng.standard_normal((wl["n_sv"], wl["n_features"])),
+                    np.float32)
+    alpha = np.asarray(rng.standard_normal(wl["n_sv"]) / wl["n_sv"],
+                       np.float32)
+
+    fir_k = fir_ops.make_kernel(config)
+    del_k = delineate_ops.make_kernel(config)
+    feat_k = Kernel(name="fft_features",
+                    executor=_feature_kernel(win, nw),
+                    counts=lambda **kw: fft_counts(n=win).scaled(nw))
+    svm_k = svm_ops.make_kernel(config)
+
+    def keep_signal_and_flags(x, flags):
+        return x, flags
+
+    stages = [
+        Stage(fir_k, consts=(jnp.asarray(h),),
+              counts_params={"n": n, "taps": taps, "itemsize": 2}),
+        # delineate consumes the filtered signal; passes (signal, flags) on
+        Stage(Kernel("delineate_keep",
+                     executor=lambda x: (x, delineate_ops.delineate(x, 0)),
+                     counts=del_k.counts),
+              counts_params={"n": n}),
+        Stage(feat_k, counts_params={}),
+        Stage(svm_k, consts=(jnp.asarray(sv), jnp.asarray(alpha),
+                             jnp.float32(0.1)),
+              params={"gamma": 0.5},
+              counts_params={"q": nw, "m": wl["n_sv"],
+                             "d": wl["n_features"]}),
+    ]
+    inputs = (jnp.asarray(synth_signal(n, seed)),)
+    return stages, inputs
+
+
+def run_tinybio(config: EGPUConfig = EGPU_16T, seed: int = 0
+                ) -> Tuple[jax.Array, "object"]:
+    """Run the full pipeline on an APU; returns (decisions, report)."""
+    apu = APU(config)
+    outs, report = apu.offload(*tinybio_stages(config, seed))
+    return outs[0].data, report

@@ -1,0 +1,7 @@
+"""repro.checkpoint — sharded, async, elastically restorable checkpoints."""
+
+from .store import (CheckpointManager, load_checkpoint, restore_sharded,
+                    save_checkpoint)
+
+__all__ = ["CheckpointManager", "save_checkpoint", "load_checkpoint",
+           "restore_sharded"]

@@ -1,0 +1,128 @@
+"""repro.configs — the 10 assigned architectures x 4 input shapes.
+
+* :data:`ARCHS` — registry: assignment id → ModelConfig (exact pool dims);
+* :data:`SHAPES` — the four shape cells (train_4k / prefill_32k /
+  decode_32k / long_500k);
+* :func:`input_specs` — ShapeDtypeStruct stand-ins for every model input of
+  an (arch, shape) cell: weak-type-correct, shardable, no device allocation
+  (the dry-run contract);
+* :func:`cells` — the live (arch, shape) grid with the skip rules of
+  DESIGN.md §4 applied (long_500k only for sub-quadratic archs; encoder-only
+  archs have no decode shapes).
+
+The e-GPU paper's own configurations (Table III presets) live in
+``repro.core.device``; these are the datacenter-scale configs the paper's
+configurability discipline is exercised against.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..models.config import ModelConfig
+from ..models.frontends import feature_dim
+from . import (deepseek_v2_236b, hubert_xlarge, jamba_1_5_large_398b,
+               minicpm_2b, mistral_large_123b, moonshot_v1_16b_a3b,
+               paligemma_3b, qwen2_5_3b, rwkv6_3b, stablelm_1_6b)
+
+ARCHS: Dict[str, ModelConfig] = {
+    c.name: c for c in (
+        jamba_1_5_large_398b.CONFIG,
+        deepseek_v2_236b.CONFIG,
+        moonshot_v1_16b_a3b.CONFIG,
+        paligemma_3b.CONFIG,
+        rwkv6_3b.CONFIG,
+        stablelm_1_6b.CONFIG,
+        mistral_large_123b.CONFIG,
+        minicpm_2b.CONFIG,
+        qwen2_5_3b.CONFIG,
+        hubert_xlarge.CONFIG,
+    )
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str            # "train" | "prefill" | "decode"
+
+
+SHAPES: Dict[str, ShapeSpec] = {
+    "train_4k": ShapeSpec("train_4k", 4_096, 256, "train"),
+    "prefill_32k": ShapeSpec("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": ShapeSpec("decode_32k", 32_768, 128, "decode"),
+    "long_500k": ShapeSpec("long_500k", 524_288, 1, "decode"),
+}
+
+
+def skip_reason(cfg: ModelConfig, shape: ShapeSpec) -> Optional[str]:
+    """None if the cell runs; otherwise why it is skipped (DESIGN.md §4)."""
+    if cfg.is_encoder and shape.kind in ("decode",):
+        return "encoder-only arch: no decode step"
+    if shape.name == "long_500k" and not cfg.subquadratic:
+        return "pure full-attention arch: O(S^2) at 512k context"
+    return None
+
+
+def cells(include_skipped: bool = False
+          ) -> List[Tuple[str, str, Optional[str]]]:
+    """The (arch, shape, skip_reason) grid — 40 nominal cells."""
+    out = []
+    for a, cfg in ARCHS.items():
+        for s, shape in SHAPES.items():
+            reason = skip_reason(cfg, shape)
+            if reason is None or include_skipped:
+                out.append((a, s, reason))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Input specs (the dry-run contract: ShapeDtypeStructs only)
+# ---------------------------------------------------------------------------
+def input_specs(arch: str, shape: str) -> Dict[str, jax.ShapeDtypeStruct]:
+    """Abstract model inputs for one cell.
+
+    train:    {"tokens"/"frames", "labels" [, "patches"]}
+    prefill:  {"tokens" [, "patches"] / "frames"}
+    decode:   {"tokens" (B,), "pos" ()} — the cache spec comes from
+              :func:`repro.models.cache_struct` in the launcher.
+    """
+    cfg = ARCHS[arch]
+    spec = SHAPES[shape]
+    b, s = spec.global_batch, spec.seq_len
+    i32 = jnp.int32
+    f = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+
+    if spec.kind == "decode":
+        return {"tokens": jax.ShapeDtypeStruct((b,), i32),
+                "pos": jax.ShapeDtypeStruct((), i32)}
+
+    out: Dict[str, jax.ShapeDtypeStruct] = {}
+    if cfg.frontend == "audio":
+        out["frames"] = jax.ShapeDtypeStruct((b, s, feature_dim(cfg)), f)
+        if spec.kind == "train":
+            out["labels"] = jax.ShapeDtypeStruct((b, s), i32)
+        return out
+
+    text_len = s
+    if cfg.frontend == "vision":
+        text_len = s - cfg.n_prefix_embed
+        out["patches"] = jax.ShapeDtypeStruct(
+            (b, cfg.n_prefix_embed, feature_dim(cfg)), f)
+    out["tokens"] = jax.ShapeDtypeStruct((b, text_len), i32)
+    if spec.kind == "train":
+        out["labels"] = jax.ShapeDtypeStruct((b, text_len), i32)
+    return out
+
+
+def get(arch: str) -> ModelConfig:
+    try:
+        return ARCHS[arch]
+    except KeyError:
+        raise KeyError(f"unknown arch {arch!r}; known: {sorted(ARCHS)}")

@@ -1,0 +1,36 @@
+"""repro.core — the e-GPU paper's contribution as a composable JAX module.
+
+Public API:
+
+* configs/knobs:  :class:`EGPUConfig`, presets ``EGPU_4T/8T/16T``, ``HOST``,
+  :class:`KernelKnobs` (TPU projection)
+* execution model: :class:`NDRange`, :func:`schedule`, :func:`optimal_ndrange`
+* runtime (Tiny-OpenCL subset): :class:`Context`, :class:`Device`,
+  :class:`CommandQueue`, :class:`Kernel`, :class:`Buffer`, :class:`Event`
+* models: :func:`egpu_time`, :func:`host_time` (machine), :func:`characterize`,
+  energy helpers (power)
+* APU: :class:`APU`, :class:`PipelineReport`
+"""
+
+from .apu import APU, PipelineReport, Stage, StageReport
+from .device import (EGPU_4T, EGPU_8T, EGPU_16T, HOST, PRESETS, EGPUConfig,
+                     KernelKnobs, check_vmem_budget)
+from .machine import CAL, PhaseBreakdown, WorkCounts, egpu_time, host_time, speedup
+from .ndrange import NDRange, crop_from_groups, edge_mask, global_ids, pad_to_groups
+from .power import (StaticCharacter, characterize, egpu_active_power_mw,
+                    egpu_energy_j, energy_reduction, host_active_power_mw,
+                    host_energy_j)
+from .runtime import Buffer, CommandQueue, Context, Device, Event, Kernel
+from .scheduler import Schedule, optimal_ndrange, schedule
+
+__all__ = [
+    "APU", "PipelineReport", "Stage", "StageReport",
+    "EGPU_4T", "EGPU_8T", "EGPU_16T", "HOST", "PRESETS", "EGPUConfig",
+    "KernelKnobs", "check_vmem_budget",
+    "CAL", "PhaseBreakdown", "WorkCounts", "egpu_time", "host_time", "speedup",
+    "NDRange", "crop_from_groups", "edge_mask", "global_ids", "pad_to_groups",
+    "StaticCharacter", "characterize", "egpu_active_power_mw", "egpu_energy_j",
+    "energy_reduction", "host_active_power_mw", "host_energy_j",
+    "Buffer", "CommandQueue", "Context", "Device", "Event", "Kernel",
+    "Schedule", "optimal_ndrange", "schedule",
+]

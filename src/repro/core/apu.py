@@ -1,0 +1,123 @@
+"""APU orchestration (paper §VI): host + e-GPU as one accelerated system.
+
+``APU.offload`` runs a pipeline of kernels on the e-GPU and compares it
+against the same pipeline on the scalar host — producing exactly the
+speed-up / energy-reduction numbers of the paper's Fig. 4 (TinyBio) while
+also returning the functional outputs, so applications get real results and
+the evaluation in one call.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax
+
+from .device import EGPUConfig, EGPU_16T, HOST
+from .machine import PhaseBreakdown
+from .ndrange import NDRange
+from .runtime import Buffer, CommandQueue, Context, Device, Kernel
+from .scheduler import optimal_ndrange
+
+
+@dataclasses.dataclass
+class Stage:
+    """One pipeline stage: kernel + its argument/extra-buffer wiring."""
+
+    kernel: Kernel
+    params: Dict[str, Any] = dataclasses.field(default_factory=dict)
+    counts_params: Dict[str, Any] = dataclasses.field(default_factory=dict)
+    consts: Tuple[Any, ...] = ()       # constant arrays appended to inputs
+    n_inputs: int = 0                  # 0 = take all previous outputs
+
+
+@dataclasses.dataclass(frozen=True)
+class StageReport:
+    """Per-kernel comparison: the paper's Fig 4 bars."""
+
+    name: str
+    egpu: PhaseBreakdown
+    host: PhaseBreakdown
+    egpu_energy_j: float
+    host_energy_j: float
+
+    @property
+    def speedup(self) -> float:
+        return self.host.total_s / self.egpu.total_s
+
+    @property
+    def energy_reduction(self) -> float:
+        return self.host_energy_j / self.egpu_energy_j
+
+
+@dataclasses.dataclass(frozen=True)
+class PipelineReport:
+    stages: Tuple[StageReport, ...]
+
+    @property
+    def overall_speedup(self) -> float:
+        h = sum(s.host.total_s for s in self.stages)
+        e = sum(s.egpu.total_s for s in self.stages)
+        return h / e
+
+    @property
+    def overall_energy_reduction(self) -> float:
+        h = sum(s.host_energy_j for s in self.stages)
+        e = sum(s.egpu_energy_j for s in self.stages)
+        return h / e
+
+
+class APU:
+    """An accelerated processing unit: X-HEEP host + one e-GPU instance."""
+
+    def __init__(self, config: EGPUConfig = EGPU_16T):
+        self.egpu = Device(config)
+        self.host = Device(HOST)
+        self.egpu_ctx = Context(self.egpu)
+        self.host_ctx = Context(self.host)
+
+    def offload(self, stages: Sequence["Stage"],
+                inputs: Sequence[jax.Array],
+                ndranges: Optional[Sequence[NDRange]] = None,
+                ) -> Tuple[Tuple[Buffer, ...], PipelineReport]:
+        """Run :class:`Stage`\\ s as a dataflow pipeline.
+
+        Each stage consumes the previous stage's outputs (plus extra
+        constant buffers it declares).  Returns the final outputs (computed
+        on the e-GPU path) and the host-vs-e-GPU :class:`PipelineReport`.
+        """
+        reports: List[StageReport] = []
+        final: Tuple[Buffer, ...] = ()
+
+        for which, ctx in (("egpu", self.egpu_ctx), ("host", self.host_ctx)):
+            q = CommandQueue(ctx)
+            bufs = tuple(ctx.create_buffer(x) for x in inputs)
+            evs = []
+            for i, stage in enumerate(stages):
+                ndr = (ndranges[i] if ndranges is not None
+                       else optimal_ndrange(bufs[0].data.size, ctx.device.config))
+                extra = tuple(ctx.create_buffer(x) for x in stage.consts)
+                take = bufs[:stage.n_inputs] if stage.n_inputs else bufs
+                # Resident pipeline (paper §IV-B): after the first kernel,
+                # intermediate data stays in the unified memory / D$ — only
+                # stage 0 pays the host->D$ fill on the e-GPU path.
+                resident = (which == "egpu" and i > 0)
+                ev = q.enqueue_nd_range(stage.kernel, ndr, take + extra,
+                                        params=stage.params,
+                                        counts_params=stage.counts_params,
+                                        _resident=resident)
+                bufs = ev.outputs
+                evs.append(ev)
+            q.finish()
+            if which == "egpu":
+                final = bufs
+                egpu_evs = evs
+            else:
+                host_evs = evs
+
+        for e_ev, h_ev, stage in zip(egpu_evs, host_evs, stages):
+            reports.append(StageReport(
+                name=stage.kernel.name, egpu=e_ev.modeled, host=h_ev.modeled,
+                egpu_energy_j=e_ev.energy_j, host_energy_j=h_ev.energy_j))
+        return final, PipelineReport(tuple(reports))

@@ -1,0 +1,188 @@
+"""e-GPU device configuration — the paper's Table II/III knobs.
+
+The e-GPU paper's central contribution is a *configurability discipline*: the
+accelerator's parallelism hierarchy (compute units / warps / threads) and its
+memory hierarchy (I$ / D$ size, banks, line) are exposed as first-class knobs,
+and a minimal NDRange runtime schedules arbitrary kernels onto whatever
+configuration was instantiated.
+
+This module holds:
+
+* :class:`EGPUConfig` — the exact hardware knobs of paper Table II, with the
+  three presets of Table III (4T / 8T / 16T) plus the X-HEEP host baseline.
+* :class:`KernelKnobs` — the TPU-native projection of those knobs: Pallas
+  BlockSpec tile shapes, pipeline (double-buffering) depth and a VMEM
+  working-set budget.  ``EGPUConfig.tpu_knobs()`` performs the mapping
+  described in DESIGN.md §2 (threads → lane tile, warps → pipeline depth,
+  D$ → VMEM budget).
+
+Nothing here touches jax device state; configs are plain frozen dataclasses so
+they can parameterize jitted functions as static arguments.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Tuple
+
+KIB = 1024
+MIB = 1024 * KIB
+
+# TPU v5e-ish magnitudes used when projecting e-GPU knobs onto Pallas tiling.
+TPU_VMEM_BYTES = 16 * MIB  # usable VMEM per core (conservative)
+TPU_LANES = 128            # VPU/MXU minor dimension
+TPU_SUBLANES = 8           # VPU second-minor dimension (float32)
+
+
+@dataclasses.dataclass(frozen=True)
+class EGPUConfig:
+    """Hardware configuration of one e-GPU instance (paper Table II).
+
+    All sizes in bytes.  The paper's presets (Table III) are exposed below as
+    ``EGPU_4T`` / ``EGPU_8T`` / ``EGPU_16T``.
+    """
+
+    name: str = "e-gpu"
+    compute_units: int = 2
+    threads_per_cu: int = 8         # parallel threads (processing elements)
+    warps_per_cu: int = 4           # concurrent warps (latency hiding)
+    icache_bytes_per_cu: int = 2 * KIB
+    icache_banks: int = 1
+    icache_line_bytes: int = 16     # 4 instructions
+    dcache_bytes: int = 16 * KIB    # shared across CUs
+    dcache_banks: int = 8
+    dcache_line_bytes: int = 32     # T x 4B  (one word per thread)
+    # --- micro-architectural constants used by the machine model ---
+    dcache_latency_cycles: int = 4  # paper §VII-A: shared D$ access latency
+    host_bus_bytes_per_cycle: int = 4  # 32-bit OBI beats (paper §VIII-B)
+    freq_hz: float = 300e6          # paper: 300 MHz @ 0.8 V, TSMC16
+    has_fpu: bool = False           # removed for TinyAI (paper §IV-A)
+
+    # ------------------------------------------------------------------
+    # Derived quantities
+    # ------------------------------------------------------------------
+    @property
+    def total_threads(self) -> int:
+        """Max resident work-items = CUs x warps x threads (paper §VIII-B)."""
+        return self.compute_units * self.warps_per_cu * self.threads_per_cu
+
+    @property
+    def parallel_lanes(self) -> int:
+        """Work executed per cycle across the device (one warp per CU issues)."""
+        return self.compute_units * self.threads_per_cu
+
+    @property
+    def cycle_s(self) -> float:
+        return 1.0 / self.freq_hz
+
+    def validate(self) -> "EGPUConfig":
+        if self.compute_units < 1 or self.threads_per_cu < 1 or self.warps_per_cu < 1:
+            raise ValueError(f"non-positive parallelism knob in {self}")
+        for field in ("icache_bytes_per_cu", "dcache_bytes"):
+            v = getattr(self, field)
+            if v <= 0 or v & (v - 1):
+                raise ValueError(f"{field}={v} must be a positive power of two")
+        if self.dcache_line_bytes % 4:
+            raise ValueError("dcache line must be a multiple of 4B (32-bit words)")
+        if self.dcache_bytes % (self.dcache_banks * self.dcache_line_bytes):
+            raise ValueError("dcache must divide evenly into banks x lines")
+        return self
+
+    # ------------------------------------------------------------------
+    # TPU projection
+    # ------------------------------------------------------------------
+    def tpu_knobs(self) -> "KernelKnobs":
+        """Project the e-GPU knobs onto TPU Pallas tiling (DESIGN.md §2).
+
+        The *ratios* between configurations are preserved; magnitudes are
+        scaled to TPU VMEM / lane widths:
+
+        * threads/CU  → minor (lane) tile, in multiples of 128
+        * warps/CU    → pipeline depth (outstanding HBM→VMEM DMAs)
+        * D$ size     → VMEM working-set budget (scaled by VMEM/16KiB)
+        * D$ line     → second-minor (sublane) tile granularity
+        """
+        scale = TPU_VMEM_BYTES // self.dcache_bytes if self.dcache_bytes else 1
+        lane_tile = TPU_LANES * max(1, self.threads_per_cu // 2)
+        sublane_tile = TPU_SUBLANES * max(1, self.dcache_line_bytes // 8)
+        return KernelKnobs(
+            lane_tile=lane_tile,
+            sublane_tile=sublane_tile,
+            pipeline_depth=max(2, self.warps_per_cu),
+            vmem_budget_bytes=self.dcache_bytes * scale,
+            grid_parallelism=self.compute_units,
+        )
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelKnobs:
+    """TPU-native kernel tuning knobs derived from an :class:`EGPUConfig`.
+
+    These drive Pallas BlockSpec choices in ``repro.kernels.*``:
+    block minor dim = ``lane_tile``; block second-minor = ``sublane_tile``;
+    the kernel's total VMEM block footprint must stay under
+    ``vmem_budget_bytes`` (checked by :func:`check_vmem_budget`).
+    """
+
+    lane_tile: int = 128
+    sublane_tile: int = 8
+    pipeline_depth: int = 2
+    vmem_budget_bytes: int = TPU_VMEM_BYTES
+    grid_parallelism: int = 1
+
+    def block_for(self, rows: int, cols: int) -> Tuple[int, int]:
+        """Largest (rows, cols)-aligned block fitting the knobs."""
+        br = min(rows, max(self.sublane_tile, TPU_SUBLANES))
+        bc = min(cols, self.lane_tile)
+        return (br, bc)
+
+
+def check_vmem_budget(knobs: KernelKnobs, *block_bytes: int) -> None:
+    """Raise if the sum of per-buffer VMEM block footprints (times the
+    pipeline depth, since Pallas multi-buffers blocks) exceeds the budget."""
+    total = sum(block_bytes) * knobs.pipeline_depth
+    if total > knobs.vmem_budget_bytes:
+        raise ValueError(
+            f"VMEM working set {total/MIB:.2f} MiB exceeds budget "
+            f"{knobs.vmem_budget_bytes/MIB:.2f} MiB "
+            f"(blocks={[b/KIB for b in block_bytes]} KiB x depth {knobs.pipeline_depth})"
+        )
+
+
+def _preset(name: str, threads: int) -> EGPUConfig:
+    """Paper Table III: 2 CUs, 4 warps, 2 KiB I$/CU (1 bank, 16 B line),
+    16 KiB shared D$ with T banks and T x 4 B lines."""
+    return EGPUConfig(
+        name=name,
+        compute_units=2,
+        threads_per_cu=threads,
+        warps_per_cu=4,
+        icache_bytes_per_cu=2 * KIB,
+        icache_banks=1,
+        icache_line_bytes=16,
+        dcache_bytes=16 * KIB,
+        dcache_banks=2 * threads // 2,   # 2 / 4 / 8 banks for 4T / 8T / 16T
+        dcache_line_bytes=4 * threads,   # T x 4 B
+    ).validate()
+
+
+EGPU_4T = _preset("e-gpu-4t", 2)    # 2 threads/CU x 2 CUs = 4 parallel threads
+EGPU_8T = _preset("e-gpu-8t", 4)
+EGPU_16T = _preset("e-gpu-16t", 8)
+
+#: X-HEEP host baseline: a single-issue scalar RISC-V CPU (paper §VI-B).
+HOST = EGPUConfig(
+    name="x-heep-host",
+    compute_units=1,
+    threads_per_cu=1,
+    warps_per_cu=1,
+    icache_bytes_per_cu=4 * KIB,
+    icache_banks=1,
+    icache_line_bytes=16,
+    dcache_bytes=4 * KIB,
+    dcache_banks=1,
+    dcache_line_bytes=4,
+)
+
+PRESETS = {c.name: c for c in (EGPU_4T, EGPU_8T, EGPU_16T, HOST)}

@@ -1,0 +1,124 @@
+"""NDRange — the Tiny-OpenCL execution model (paper §III-B / §V-B).
+
+OpenCL launches a *kernel* over a ``global_size`` of work-items, grouped into
+work-groups of ``local_size``.  The paper's Tiny-OpenCL scheduler distributes
+work-groups over compute units and performs all boundary checks up-front so
+the user kernel never has to.
+
+On TPU the same structure maps onto a Pallas grid:
+
+* one **work-group**  → one grid step (one VMEM-resident block)
+* **work-items**      → lanes within the block (vectorized, masked at edges)
+* **compute units**   → grid parallelism / mesh shards (see runtime.py)
+
+:func:`to_grid` performs the mapping; :func:`global_ids` reconstructs each
+work-item's global ID inside a kernel body (the OpenCL ``get_global_id``),
+and :func:`edge_mask` gives the boundary mask the Tiny-OpenCL scheduler
+implicitly applies.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class NDRange:
+    """An OpenCL-style NDRange: 1-D or 2-D global/local sizes.
+
+    ``global_size`` need not divide by ``local_size`` — the scheduler pads to
+    whole work-groups and masks the tail, mirroring the paper's up-front
+    boundary checks (§V-B: "the user kernel is relieved from handling such
+    logic").
+    """
+
+    global_size: Tuple[int, ...]
+    local_size: Tuple[int, ...]
+
+    def __post_init__(self):
+        if len(self.global_size) not in (1, 2):
+            raise ValueError("NDRange supports 1-D and 2-D launches")
+        if len(self.global_size) != len(self.local_size):
+            raise ValueError("global/local rank mismatch")
+        if any(g <= 0 for g in self.global_size) or any(l <= 0 for l in self.local_size):
+            raise ValueError("sizes must be positive")
+
+    @property
+    def rank(self) -> int:
+        return len(self.global_size)
+
+    @property
+    def num_groups(self) -> Tuple[int, ...]:
+        """Work-groups per dimension (ceil division — tail groups are masked)."""
+        return tuple(-(-g // l) for g, l in zip(self.global_size, self.local_size))
+
+    @property
+    def total_groups(self) -> int:
+        return math.prod(self.num_groups)
+
+    @property
+    def total_work_items(self) -> int:
+        return math.prod(self.global_size)
+
+    @property
+    def padded_size(self) -> Tuple[int, ...]:
+        return tuple(n * l for n, l in zip(self.num_groups, self.local_size))
+
+    def to_grid(self) -> Tuple[int, ...]:
+        """The Pallas grid for this NDRange (one grid step per work-group)."""
+        return self.num_groups
+
+
+def global_ids(ndr: NDRange, dim: int = 0) -> jax.Array:
+    """Inside a Pallas kernel body: the global IDs of this work-group's items.
+
+    Returns a ``local_size``-shaped int32 array — 2-D iota throughout (TPU
+    requires >= 2-D iota; interpret mode matches).
+    """
+    import jax.experimental.pallas as pl  # local import: keep module import cheap
+
+    if ndr.rank == 1:
+        base = pl.program_id(0) * ndr.local_size[0]
+        ids = jax.lax.broadcasted_iota(jnp.int32, (ndr.local_size[0], 1), 0)
+        return base + ids[:, 0] if dim == 0 else ids[:, 0] * 0
+    base = pl.program_id(dim) * ndr.local_size[dim]
+    ids = jax.lax.broadcasted_iota(jnp.int32, ndr.local_size, dim)
+    return base + ids
+
+
+def edge_mask(ndr: NDRange) -> jax.Array:
+    """Boundary mask for the current work-group (True = real work-item).
+
+    This is the Tiny-OpenCL scheduler's up-front boundary check, expressed as
+    a vector mask (the TPU analogue of SIMT thread masking).
+    """
+    if ndr.rank == 1:
+        return global_ids(ndr, 0) < ndr.global_size[0]
+    m0 = global_ids(ndr, 0) < ndr.global_size[0]
+    m1 = global_ids(ndr, 1) < ndr.global_size[1]
+    return jnp.logical_and(m0, m1)
+
+
+def pad_to_groups(x: jax.Array, ndr: NDRange, axis: int = 0,
+                  fill: float | int = 0) -> jax.Array:
+    """Pad ``x`` along ``axis`` so whole work-groups tile it exactly."""
+    target = ndr.padded_size[axis if ndr.rank > 1 else 0]
+    cur = x.shape[axis]
+    if cur == target:
+        return x
+    pads = [(0, 0)] * x.ndim
+    pads[axis] = (0, target - cur)
+    return jnp.pad(x, pads, constant_values=fill)
+
+
+def crop_from_groups(x: jax.Array, ndr: NDRange, axis: int = 0) -> jax.Array:
+    """Inverse of :func:`pad_to_groups`."""
+    size = ndr.global_size[axis if ndr.rank > 1 else 0]
+    sl = [slice(None)] * x.ndim
+    sl[axis] = slice(0, size)
+    return x[tuple(sl)]

@@ -1,0 +1,182 @@
+"""TinyCL — the host-side Tiny-OpenCL runtime (paper §V / §VI-C), in JAX.
+
+The paper's runtime is a subset of the OpenCL host API that works without an
+OS, file system, or multithreading: create buffers, set kernel args, enqueue
+an NDRange, wait for the completion interrupt.  We reproduce that API shape
+with JAX semantics:
+
+* a :class:`Buffer` wraps a ``jax.Array`` living in the *unified* memory
+  (host HBM == device global memory, exactly the paper's §IV-B model);
+* a :class:`Kernel` couples an executor (a pure JAX callable — either the
+  pure-jnp reference or the Pallas TPU implementation) with a ``counts``
+  function that derives the structural :class:`~repro.core.machine.WorkCounts`
+  for the analytic machine model;
+* ``CommandQueue.enqueue_nd_range`` jit-executes the kernel and returns an
+  :class:`Event` carrying both the functional results and the modeled
+  :class:`~repro.core.machine.PhaseBreakdown` / energy for the queue's device
+  configuration — the numbers behind Figs 3 & 4;
+* events chain: kernels consuming a prior event's outputs execute after it
+  (JAX dataflow gives this for free, matching in-order OpenCL queues).
+
+Kernels are executed functionally (outputs are fresh buffers); this is the
+one semantic departure from OpenCL's in-place buffer writes and is what makes
+every kernel jit/grad/vmap-compatible.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .device import EGPUConfig, EGPU_16T, HOST
+from .machine import PhaseBreakdown, WorkCounts, egpu_time, host_time
+from .ndrange import NDRange
+from .power import egpu_energy_j, host_energy_j
+
+
+class Buffer:
+    """A unified-memory buffer (CL_MEM-style flags kept for API fidelity)."""
+
+    def __init__(self, data: jax.Array, flags: str = "rw"):
+        self.data = jnp.asarray(data)
+        self.flags = flags
+
+    @property
+    def nbytes(self) -> int:
+        return self.data.size * self.data.dtype.itemsize
+
+    @property
+    def shape(self):
+        return self.data.shape
+
+    @property
+    def dtype(self):
+        return self.data.dtype
+
+    def read(self) -> jax.Array:
+        """clEnqueueReadBuffer — a no-op copy under unified memory."""
+        return self.data
+
+
+@dataclasses.dataclass(frozen=True)
+class Kernel:
+    """An OpenCL kernel: executor + structural work counts.
+
+    ``executor(*arrays, **params) -> array | tuple[array]`` must be pure.
+    ``counts(**params) -> WorkCounts`` derives the machine-model inputs from
+    the problem size (shapes are passed through ``params`` by the caller).
+    """
+
+    name: str
+    executor: Callable[..., Any]
+    counts: Optional[Callable[..., WorkCounts]] = None
+
+
+class Event:
+    """Kernel-completion event: functional results + modeled time/energy."""
+
+    def __init__(self, kernel: Kernel, outputs: Tuple[Buffer, ...],
+                 modeled: Optional[PhaseBreakdown], energy_j: Optional[float],
+                 wall_s: float):
+        self.kernel = kernel
+        self.outputs = outputs
+        self.modeled = modeled
+        self.energy_j = energy_j
+        self.wall_s = wall_s
+
+    def wait(self) -> Tuple[Buffer, ...]:
+        for b in self.outputs:
+            b.data.block_until_ready()
+        return self.outputs
+
+
+class Device:
+    """One compute device: an e-GPU instance or the scalar host baseline."""
+
+    def __init__(self, config: EGPUConfig = EGPU_16T):
+        self.config = config
+
+    @property
+    def is_host(self) -> bool:
+        return self.config.name == HOST.name
+
+
+class Context:
+    def __init__(self, device: Device):
+        self.device = device
+
+    def create_buffer(self, data, flags: str = "rw") -> Buffer:
+        return Buffer(jnp.asarray(data), flags)
+
+
+class CommandQueue:
+    """An in-order command queue bound to one device."""
+
+    def __init__(self, ctx: Context, profile: bool = True):
+        self.ctx = ctx
+        self.profile = profile
+        self._events: list[Event] = []
+        self._jit_cache: Dict[str, Callable] = {}
+
+    # -- the OpenCL-subset entry point -------------------------------------
+    def enqueue_nd_range(self, kernel: Kernel, ndr: NDRange,
+                         args: Sequence[Buffer],
+                         params: Optional[Dict[str, Any]] = None,
+                         counts_params: Optional[Dict[str, Any]] = None,
+                         _resident: bool = False) -> Event:
+        """Launch ``kernel`` over ``ndr`` with buffer ``args``.
+
+        ``params`` are executor kwargs (the paper's kernel-args region);
+        ``counts_params`` are the problem sizes handed to the kernel's
+        ``counts()`` for the machine model (defaults to ``params``).
+        ``_resident=True`` marks a stage whose inputs are already resident
+        in the unified memory / D$ (paper §IV-B pipeline chaining): the
+        modeled host<->D$ transfer is waived for it.
+        """
+        params = params or {}
+        fn = self._jit_cache.get(kernel.name)
+        if fn is None:
+            fn = jax.jit(kernel.executor, static_argnames=tuple(
+                k for k, v in params.items() if not isinstance(v, (jax.Array, jnp.ndarray))))
+            self._jit_cache[kernel.name] = fn
+        t0 = time.perf_counter()
+        raw = fn(*[b.data for b in args], **params)
+        jax.block_until_ready(raw)
+        wall = time.perf_counter() - t0
+        outs = tuple(Buffer(r) for r in (raw if isinstance(raw, tuple) else (raw,)))
+
+        modeled = energy = None
+        if self.profile and kernel.counts is not None:
+            counts = kernel.counts(**(counts_params if counts_params
+                                      is not None else params))
+            if _resident:
+                counts = dataclasses.replace(counts, host_bytes=0.0)
+            cfg = self.ctx.device.config
+            if self.ctx.device.is_host:
+                modeled = host_time(counts, cfg)
+                energy = host_energy_j(modeled)
+            else:
+                modeled = egpu_time(cfg, counts, ndr)
+                energy = egpu_energy_j(cfg, modeled)
+        ev = Event(kernel, outs, modeled, energy, wall)
+        self._events.append(ev)
+        return ev
+
+    def finish(self) -> None:
+        """Block until every enqueued kernel completed (clFinish)."""
+        for ev in self._events:
+            ev.wait()
+
+    @property
+    def events(self) -> Tuple[Event, ...]:
+        return tuple(self._events)
+
+    def total_modeled_s(self) -> float:
+        return sum(e.modeled.total_s for e in self._events if e.modeled)
+
+    def total_energy_j(self) -> float:
+        return sum(e.energy_j for e in self._events if e.energy_j)

@@ -1,0 +1,5 @@
+"""repro.data — deterministic synthetic sharded token pipeline."""
+
+from .pipeline import DataConfig, SyntheticLMData, make_batch_struct
+
+__all__ = ["DataConfig", "SyntheticLMData", "make_batch_struct"]

@@ -1,0 +1,27 @@
+"""repro.distributed — sharding rules, activation constraints, collectives.
+
+The e-GPU paper's Tiny-OpenCL scheduler distributes work-groups over compute
+units; at datacenter scale the same role is played by GSPMD sharding over a
+device mesh.  This package is the "scheduler" of the scaled-up system:
+
+* :mod:`.sharding` — logical-axis → mesh-axis rules (DP/FSDP/TP/EP/SP),
+  activation sharding constraints, parameter PartitionSpec derivation with
+  divisibility fallback;
+* :mod:`.compression` — int8 gradient compression with error feedback,
+  wrapped around the DP reduction;
+* :mod:`.elastic` — cross-mesh resharding used by checkpoint restore when
+  the device count changed (elastic scaling / failure recovery).
+"""
+
+from .sharding import (ShardingRules, TRAIN_RULES, TRAIN_FSDP_RULES,
+                       SERVE_RULES, activate, active_rules, constrain,
+                       param_specs, batch_spec, spec_for, train_rules_for)
+from .compression import compress_int8, decompress_int8, compressed_psum
+from .elastic import reshard_arrays
+
+__all__ = [
+    "ShardingRules", "TRAIN_RULES", "TRAIN_FSDP_RULES", "SERVE_RULES",
+    "activate", "active_rules", "constrain", "param_specs", "batch_spec",
+    "spec_for", "train_rules_for",
+    "compress_int8", "decompress_int8", "compressed_psum", "reshard_arrays",
+]

@@ -1,0 +1,91 @@
+"""Int8 gradient compression with error feedback, around the DP reduction.
+
+At 1000+-node scale the cross-pod (DCI) gradient all-reduce is the scarcest
+bandwidth in the system.  We compress gradients to int8 with per-tensor
+scales before the reduction and decompress after, carrying the quantization
+residual forward as *error feedback* (Seide et al.; 1-bit Adam lineage) so
+the compression is unbiased over time and SGD convergence is preserved.
+
+Two entry points:
+
+* :func:`compress_int8` / :func:`decompress_int8` — the pure codec (+error
+  state), used by the trainer around ``psum_scatter`` in shard_map form;
+* :func:`compressed_psum` — a drop-in reduction for a gradient pytree inside
+  ``shard_map``: quantize → all-reduce int8 (4x fewer bytes on the wire) →
+  dequantize, returning the new error state.
+
+The codec is exact-shape-preserving and jit-friendly; tests verify the
+error-feedback telescoping property (mean compressed-sum error → 0 over
+steps) and byte counts.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+INT8_MAX = 127.0
+
+
+def compress_int8(g: jax.Array, err: Optional[jax.Array] = None
+                  ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Quantize ``g + err`` to int8.  Returns (q, scale, new_err).
+
+    scale is per-tensor (amax / 127); new_err is the quantization residual
+    to be fed back into the next step's gradient.
+    """
+    gf = g.astype(jnp.float32)
+    if err is not None:
+        gf = gf + err
+    amax = jnp.max(jnp.abs(gf))
+    scale = jnp.maximum(amax / INT8_MAX, 1e-20)
+    q = jnp.clip(jnp.round(gf / scale), -INT8_MAX, INT8_MAX).astype(jnp.int8)
+    new_err = gf - q.astype(jnp.float32) * scale
+    return q, scale, new_err
+
+
+def decompress_int8(q: jax.Array, scale: jax.Array,
+                    dtype=jnp.float32) -> jax.Array:
+    return (q.astype(jnp.float32) * scale).astype(dtype)
+
+
+def compressed_psum(grads, errs, axis_name: str):
+    """Mean-reduce a gradient pytree over ``axis_name`` on an int8 wire
+    (inside ``shard_map``).
+
+    Wire format: each participant quantizes (grad + error) to int8 with its
+    own scale, ALL-GATHERS the int8 payload (+ fp32 scales), and sums the
+    dequantized contributions locally.  For the cross-pod hop (N = 2 pods)
+    this moves (N-1)·bytes_int8 per device vs 2·(N-1)/N·bytes_f32 for a
+    ring all-reduce — a 4x wire reduction.  Per-participant scales keep the
+    quantization unbiased per sender; error feedback carries each sender's
+    residual to its next step (telescoping — tests/test_substrate.py).
+
+    Returns (mean_grads fp32, new_errs).
+    """
+    def one(g, e):
+        q, scale, new_e = compress_int8(g, e)
+        all_q = jax.lax.all_gather(q, axis_name)            # (N, ...) int8
+        all_s = jax.lax.all_gather(scale, axis_name)        # (N,) f32
+        n = all_q.shape[0]
+        shaped = all_s.reshape((n,) + (1,) * (all_q.ndim - 1))
+        total = jnp.sum(all_q.astype(jnp.float32) * shaped, axis=0)
+        return total / n, new_e
+
+    flat_g, tdef = jax.tree_util.tree_flatten(grads)
+    flat_e = (jax.tree_util.tree_leaves(errs) if errs is not None
+              else [None] * len(flat_g))
+    out_g, out_e = [], []
+    for g, e in zip(flat_g, flat_e):
+        rg, ne = one(g, e)
+        out_g.append(rg)
+        out_e.append(ne)
+    return (jax.tree_util.tree_unflatten(tdef, out_g),
+            jax.tree_util.tree_unflatten(tdef, out_e))
+
+
+def init_error_state(grads):
+    return jax.tree_util.tree_map(
+        lambda g: jnp.zeros(g.shape, jnp.float32), grads)

@@ -1,0 +1,40 @@
+"""Shared helpers for the Pallas TPU kernels.
+
+Every kernel in this package targets TPU (``pl.pallas_call`` with explicit
+``BlockSpec`` VMEM tiling, MXU-aligned tiles) and is *validated* on CPU via
+``interpret=True``, which executes the kernel body in Python.  ``INTERPRET``
+is resolved once from the actual backend so the same ops work on both.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+@functools.lru_cache(None)
+def use_interpret() -> bool:
+    """Pallas interpret mode unless we are actually on TPU."""
+    return jax.default_backend() != "tpu"
+
+
+def round_up(x: int, m: int) -> int:
+    return -(-x // m) * m
+
+
+def pad_dim(x: jax.Array, axis: int, multiple: int, fill=0) -> jax.Array:
+    """Zero-pad ``axis`` of ``x`` up to a multiple (kernels mask the tail)."""
+    size = x.shape[axis]
+    target = round_up(size, multiple)
+    if target == size:
+        return x
+    pads = [(0, 0)] * x.ndim
+    pads[axis] = (0, target - size)
+    return jnp.pad(x, pads, constant_values=fill)
+
+
+def cdiv(a: int, b: int) -> int:
+    return -(-a // b)

@@ -1,0 +1,36 @@
+"""Public decode-attention op with seq-sharded flash-decoding combine."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from ..common import use_interpret
+from .decode_attention import decode_attention_pallas
+from .ref import (combine_partials, counts,  # noqa: F401 (re-exported)
+                  decode_attention_partial_ref, decode_attention_ref)
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "impl"))
+def decode_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                     scale: float | None = None,
+                     impl: str = "auto") -> jax.Array:
+    """One-token attention q (B,H,Dk) against cache k/v (B,KVH,T,D*).
+
+    On TPU this is the Pallas flash-decoding kernel; elsewhere the jnp
+    partial form (identical math, fp32 softmax).  When the cache's sequence
+    axis is sharded over a mesh axis, jit/GSPMD turns the max/sum/weighted-sum
+    reductions of the jnp form into the all-reduce combine of flash-decoding
+    automatically — the Pallas path is combined explicitly by the serving
+    layer via :func:`combine_partials`.
+    """
+    if impl == "auto":
+        impl = "xla" if use_interpret() else "pallas"
+    if impl == "pallas":
+        t = k.shape[2]
+        bk = 512 if t % 512 == 0 else (128 if t % 128 == 0 else t)
+        out, _, _ = decode_attention_pallas(q, k, v, scale=scale, bk=bk)
+        return out
+    return decode_attention_ref(q, k, v, scale=scale)

@@ -1,0 +1,58 @@
+"""Pure-jnp oracle for single-token (decode) attention.
+
+Decode attends one new query per sequence against the full KV cache:
+q (B, H, Dk) x k/v (B, KVH, T, D*) -> (B, H, Dv).  The oracle also exposes
+the *partial-softmax* form (out, m, l) used to combine seq-sharded shards
+(flash-decoding): each shard reduces its KV slice, then shards merge with
+:func:`combine_partials` — an exact algebraic identity, tested as such.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from ...core.machine import WorkCounts
+from ..flash_attention.ref import repeat_kv
+
+
+def decode_attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                         scale: float | None = None) -> jnp.ndarray:
+    out, m, l = decode_attention_partial_ref(q, k, v, scale=scale)
+    return (out / l).astype(q.dtype)
+
+
+def decode_attention_partial_ref(q, k, v, *, scale=None):
+    """Unnormalized partial: returns (acc (B,H,Dv) f32, m (B,H,1), l (B,H,1))."""
+    b, h, dk = q.shape
+    kvh = k.shape[1]
+    group = h // kvh
+    k = repeat_kv(k, group)
+    v = repeat_kv(v, group)
+    scale = (dk ** -0.5) if scale is None else scale
+    s = jnp.einsum("bhd,bhtd->bht", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    m = jnp.max(s, axis=-1, keepdims=True)
+    p = jnp.exp(s - m)
+    l = jnp.sum(p, axis=-1, keepdims=True)
+    acc = jnp.einsum("bht,bhtd->bhd", p, v.astype(jnp.float32))
+    return acc, m, l
+
+
+def combine_partials(parts):
+    """Merge [(acc, m, l), ...] partials from seq shards — exact."""
+    acc, m, l = parts[0]
+    for acc2, m2, l2 in parts[1:]:
+        mn = jnp.maximum(m, m2)
+        w1, w2 = jnp.exp(m - mn), jnp.exp(m2 - mn)
+        acc = acc * w1 + acc2 * w2
+        l = l * w1 + l2 * w2
+        m = mn
+    return acc / l, m, l
+
+
+def counts(b: int, h: int, t: int, dk: int, dv: int,
+           itemsize: int = 2) -> WorkCounts:
+    macs = float(b) * h * t * (dk + dv)
+    io = float(b) * t * (dk + dv) * itemsize      # the KV-cache read dominates
+    return WorkCounts(ops=2.0 * macs, dcache_bytes=io, host_bytes=io,
+                      working_set=io)

@@ -1,0 +1,40 @@
+"""jit'd public wrapper for the delineation kernel + TinyCL registration."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from ...core.device import EGPU_16T, EGPUConfig
+from ...core.runtime import Kernel
+from ..common import pad_dim
+from .delineate import delineate_pallas
+from .ref import counts as delineate_counts, delineate_ref, extrema_times
+
+
+@functools.partial(jax.jit, static_argnames=("block", "thr"))
+def delineate(x: jax.Array, thr=0, block: int = 512) -> jax.Array:
+    """Peak/trough flags for any-length 1-D signal via the Pallas kernel.
+
+    The tail pad uses the last sample value, so no spurious extrema appear at
+    the padded boundary (a constant run is never a strict rise).
+    """
+    n = x.shape[0]
+    xp = pad_dim(x, 0, block, fill=0)
+    if xp.shape[0] != n:
+        xp = xp.at[n:].set(x[n - 1])
+    flags = delineate_pallas(xp, thr, block=block, true_n=n)
+    return flags[:n]
+
+
+def make_kernel(config: EGPUConfig = EGPU_16T, use_pallas: bool = True) -> Kernel:
+    knobs = config.tpu_knobs()
+    block = max(512, knobs.lane_tile)
+    exe = (lambda x, thr=0: delineate(x, thr, block)) if use_pallas else delineate_ref
+    return Kernel(
+        name="delineate",
+        executor=exe,
+        counts=lambda n, itemsize=4: delineate_counts(n, itemsize),
+    )

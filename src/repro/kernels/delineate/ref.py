@@ -1,0 +1,60 @@
+"""Pure-jnp oracle + counts for delineation (TinyBio stage 2).
+
+The paper's delineation detects the peaks and troughs of the filtered
+respiration signal to determine inspiration/expiration times (§VII-B).  It is
+the *control-intensive* stage: on the e-GPU, divergent branches serialize
+under thread masking (§VIII-C), which is why its speed-up (3.1-13.1x) trails
+the FIR's (3.6-15.1x).
+
+We implement it branch-free — the TPU/VPU analogue of SIMT thread masking is
+a masked select, so the "divergent" both-sides cost is explicit in the code
+itself: every lane evaluates both the peak and the trough predicate.
+
+Output encoding (int8): +1 = peak, -1 = trough, 0 = neither.  Endpoints are
+never extrema (they lack a neighbour).  A plateau credits its first sample
+(strict rise before, non-strict fall after), matching the usual biosignal
+delineator convention.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from ...core.machine import WorkCounts
+
+
+def delineate_ref(x: jnp.ndarray, thr: float | int = 0) -> jnp.ndarray:
+    """Flags[i] = +1 if x[i] is a local max above ``thr``, -1 if a local min
+    below ``-thr``, else 0.  x: 1-D float or integer signal."""
+    prev = jnp.concatenate([x[:1], x[:-1]])
+    nxt = jnp.concatenate([x[1:], x[-1:]])
+    n = x.shape[0]
+    idx = jnp.arange(n)
+    interior = (idx > 0) & (idx < n - 1)
+    is_peak = (x > prev) & (x >= nxt) & (x > thr) & interior
+    is_trough = (x < prev) & (x <= nxt) & (x < -thr) & interior
+    return (is_peak.astype(jnp.int8) - is_trough.astype(jnp.int8))
+
+
+def extrema_times(flags: jnp.ndarray):
+    """Host-side post-processing: indices of peaks / troughs (inspiration /
+    expiration onsets).  Fixed-size outputs (padded with -1) so it stays
+    jit-friendly."""
+    n = flags.shape[0]
+    idx = jnp.arange(n)
+    peak_t = jnp.where(flags > 0, idx, n)
+    trough_t = jnp.where(flags < 0, idx, n)
+    peaks = jnp.sort(peak_t)
+    troughs = jnp.sort(trough_t)
+    return jnp.where(peaks < n, peaks, -1), jnp.where(troughs < n, troughs, -1)
+
+
+def counts(n: int, itemsize: int = 4) -> WorkCounts:
+    # ~8 compare/select ops per sample, both predicate paths always evaluated
+    ops = 8.0 * n
+    dcache = 3.0 * n * itemsize + n  # x, prev, next reads + int8 flags out
+    host = n * itemsize + n
+    # streaming 3-point stencil: live working set is a few cache lines
+    return WorkCounts(ops=ops, dcache_bytes=dcache, host_bytes=host,
+                      working_set=1024.0 * itemsize,
+                      divergence=1.0)  # fully control-dominated stage

@@ -1,0 +1,38 @@
+"""jit'd public wrapper for the FIR kernel + TinyCL registration."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from ...core.device import EGPU_16T, EGPUConfig
+from ...core.runtime import Kernel
+from ..common import pad_dim, round_up
+from .fir import fir_pallas
+from .ref import FXP_SHIFT, counts as fir_counts, fir_ref
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def fir(x: jax.Array, h: jax.Array, block: int = 512) -> jax.Array:
+    """Causal FIR filter of any length/dtype via the Pallas kernel."""
+    n = x.shape[0]
+    taps = h.shape[0]
+    block = max(block, round_up(taps, 128))
+    fixed = jnp.issubdtype(x.dtype, jnp.integer)
+    xp = pad_dim(x, 0, block)
+    y = fir_pallas(xp, h, block=block,
+                   fxp_shift=FXP_SHIFT if fixed else None)
+    return y[:n]
+
+
+def make_kernel(config: EGPUConfig = EGPU_16T, use_pallas: bool = True) -> Kernel:
+    knobs = config.tpu_knobs()
+    block = max(512, knobs.lane_tile)
+    exe = (lambda x, h: fir(x, h, block)) if use_pallas else fir_ref
+    return Kernel(
+        name="fir",
+        executor=exe,
+        counts=lambda n, taps, itemsize=4: fir_counts(n, taps, itemsize),
+    )

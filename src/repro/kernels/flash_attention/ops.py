@@ -1,0 +1,163 @@
+"""Public fused-attention op: Pallas on TPU, triangle-scan XLA elsewhere.
+
+The XLA path is not a naive softmax: causal attention is computed as a
+``lax.scan`` over the *static* list of (q-chunk, kv-chunk) pairs on or below
+the diagonal, with online-softmax state carried in full-sequence buffers.
+This keeps HLO size O(1) in sequence length, bounds live memory to
+O(S * Dv + bq * bk) instead of O(S * T), and — because the pair list is
+static — performs exactly the causal half of the FLOPs, so the dry-run
+roofline matches what the TPU kernel would do.  Non-causal (encoder)
+attention scans kv chunks only.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from ..common import pad_dim, use_interpret
+from .flash_attention import flash_attention_pallas
+from .ref import counts, mha_ref, repeat_kv  # noqa: F401  (re-exported)
+
+NEG_INF = -1e30
+
+
+def _causal_pairs(nq: int, nk: int, bq: int, bk: int, q_offset: int):
+    """Static (i, j) kv-visibility pairs for causal chunked attention."""
+    pairs = []
+    for i in range(nq):
+        hi = q_offset + (i + 1) * bq - 1          # last absolute q row
+        jmax = min(nk - 1, hi // bk)
+        pairs.extend((i, j) for j in range(jmax + 1))
+    return pairs
+
+
+def _block(q, k, v, scale, causal, qi0, kj0, bq, bk):
+    """One online-softmax block: returns (m, l, acc) contributions."""
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    if causal:
+        qi = qi0 + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+        kj = kj0 + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        s = jnp.where((qi >= kj)[None, None], s, NEG_INF)
+    m = jnp.max(s, axis=-1, keepdims=True)
+    p = jnp.exp(s - m)
+    l = jnp.sum(p, axis=-1, keepdims=True)
+    acc = jnp.einsum("bhqk,bhkd->bhqd", p, v.astype(jnp.float32))
+    return m, l, acc
+
+
+def _merge(m0, l0, a0, m1, l1, a1):
+    m = jnp.maximum(m0, m1)
+    w0 = jnp.exp(m0 - m)
+    w1 = jnp.exp(m1 - m)
+    return m, l0 * w0 + l1 * w1, a0 * w0 + a1 * w1
+
+
+def _xla_causal(q, k, v, scale, bq, bk, q_offset):
+    b, h, s, dk = q.shape
+    kvh, t, dv = k.shape[1], k.shape[2], v.shape[3]
+    group = h // kvh
+    k = repeat_kv(k, group)
+    v = repeat_kv(v, group)
+    nq, nk = s // bq, t // bk
+    pairs = jnp.asarray(_causal_pairs(nq, nk, bq, bk, q_offset), jnp.int32)
+
+    m0 = jnp.full((b, h, s, 1), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, h, s, 1), jnp.float32)
+    a0 = jnp.zeros((b, h, s, dv), jnp.float32)
+
+    def body(carry, ij):
+        m_all, l_all, acc_all = carry
+        i, j = ij[0], ij[1]
+        qc = jax.lax.dynamic_slice_in_dim(q, i * bq, bq, axis=2)
+        kc = jax.lax.dynamic_slice_in_dim(k, j * bk, bk, axis=2)
+        vc = jax.lax.dynamic_slice_in_dim(v, j * bk, bk, axis=2)
+        mb, lb, ab = _block(qc, kc, vc, scale, True,
+                            q_offset + i * bq, j * bk, bq, bk)
+        mp = jax.lax.dynamic_slice_in_dim(m_all, i * bq, bq, axis=2)
+        lp = jax.lax.dynamic_slice_in_dim(l_all, i * bq, bq, axis=2)
+        ap = jax.lax.dynamic_slice_in_dim(acc_all, i * bq, bq, axis=2)
+        mn, ln, an = _merge(mp, lp, ap, mb, lb, ab)
+        m_all = jax.lax.dynamic_update_slice_in_dim(m_all, mn, i * bq, axis=2)
+        l_all = jax.lax.dynamic_update_slice_in_dim(l_all, ln, i * bq, axis=2)
+        acc_all = jax.lax.dynamic_update_slice_in_dim(acc_all, an, i * bq, axis=2)
+        return (m_all, l_all, acc_all), None
+
+    (m_all, l_all, acc_all), _ = jax.lax.scan(body, (m0, l0, a0), pairs)
+    out = acc_all / jnp.where(l_all == 0.0, 1.0, l_all)
+    return out.astype(q.dtype)
+
+
+def _xla_full(q, k, v, scale, causal, bk, q_offset):
+    """Non-causal (or decode-suffix) attention: scan over kv chunks only."""
+    b, h, s, dk = q.shape
+    kvh, t, dv = k.shape[1], k.shape[2], v.shape[3]
+    group = h // kvh
+    k = repeat_kv(k, group)
+    v = repeat_kv(v, group)
+    nk = t // bk
+
+    m0 = jnp.full((b, h, s, 1), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, h, s, 1), jnp.float32)
+    a0 = jnp.zeros((b, h, s, dv), jnp.float32)
+
+    def body(carry, j):
+        m_all, l_all, acc_all = carry
+        kc = jax.lax.dynamic_slice_in_dim(k, j * bk, bk, axis=2)
+        vc = jax.lax.dynamic_slice_in_dim(v, j * bk, bk, axis=2)
+        mb, lb, ab = _block(q, kc, vc, scale, causal, q_offset, j * bk, s, bk)
+        return _merge(m_all, l_all, acc_all, mb, lb, ab), None
+
+    (m_all, l_all, acc_all), _ = jax.lax.scan(
+        body, (m0, l0, a0), jnp.arange(nk, dtype=jnp.int32))
+    out = acc_all / jnp.where(l_all == 0.0, 1.0, l_all)
+    return out.astype(q.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "scale", "q_offset",
+                                             "bq", "bk", "impl"))
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, scale: float | None = None,
+                    q_offset: int = 0, bq: int = 512, bk: int = 512,
+                    impl: str = "auto") -> jax.Array:
+    """Fused attention, any (B,H,S,Dk) x (B,KVH,T,Dk) x (B,KVH,T,Dv).
+
+    impl: "auto" (pallas on TPU, xla otherwise), "pallas", "xla".
+    Sequence lengths are padded up to the block sizes internally; padded kv
+    positions are masked out via the causal/validity mask.
+    """
+    b, h, s, dk = q.shape
+    t = k.shape[2]
+    scale = (dk ** -0.5) if scale is None else scale
+    if impl == "auto":
+        impl = "xla" if use_interpret() else "pallas"
+
+    # Block sizes clamp to the (rounded) problem; TPU wants >= (8, 128) tiles.
+    def _round_up(x, m):
+        return -(-x // m) * m
+    if impl == "pallas":
+        bq_ = min(bq, _round_up(s, 8))
+        bk_ = min(bk, _round_up(t, 128))
+    else:
+        bq_, bk_ = min(bq, s), min(bk, t)
+    qp = pad_dim(q, 2, bq_)
+    kp = pad_dim(k, 2, bk_)
+    vp = pad_dim(v, 2, bk_)
+    # Padded kv columns: under causal masking they sit above the diagonal of
+    # every real q row (kj >= t > qi), so they are always hidden.  Non-causal
+    # callers must pass a dividing block size (checked below).
+
+    if impl == "pallas":
+        out = flash_attention_pallas(qp, kp, vp, causal=causal, scale=scale,
+                                     bq=bq_, bk=bk_, q_offset=q_offset)
+    elif causal:
+        out = _xla_causal(qp, kp, vp, scale, bq_, bk_, q_offset)
+    else:
+        if kp.shape[2] != t:
+            raise ValueError("non-causal attention requires T % bk == 0 "
+                             f"(T={t}, bk={bk_}) — pick a dividing block")
+        out = _xla_full(qp, kp, vp, scale, False, bk_, q_offset)
+    return out[:, :, :s]

@@ -1,0 +1,57 @@
+"""Pure-jnp oracle for fused (flash) attention.
+
+Layout convention across the repo: q (B, H, S, Dk), k (B, KVH, T, Dk),
+v (B, KVH, T, Dv) with grouped-query sharing (KVH divides H).  Dk and Dv may
+differ (MLA uses Dk = 192 = nope 128 + rope 64 against Dv = 128).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from ...core.machine import WorkCounts
+
+
+def repeat_kv(x: jnp.ndarray, group: int) -> jnp.ndarray:
+    """(B, KVH, T, D) -> (B, KVH * group, T, D) by repeating each kv head."""
+    if group == 1:
+        return x
+    b, kvh, t, d = x.shape
+    return jnp.broadcast_to(x[:, :, None], (b, kvh, group, t, d)).reshape(
+        b, kvh * group, t, d)
+
+
+def mha_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+            causal: bool = True, scale: float | None = None,
+            q_offset: int = 0) -> jnp.ndarray:
+    """Plain softmax attention oracle (fp32 softmax).
+
+    ``q_offset`` is the absolute position of q[…, 0, :] — used when q is a
+    suffix of a longer sequence (decode / chunked prefill): causal masking
+    compares (q_offset + i) >= j.
+    """
+    b, h, s, dk = q.shape
+    kvh, t = k.shape[1], k.shape[2]
+    group = h // kvh
+    k = repeat_kv(k, group)
+    v = repeat_kv(v, group)
+    scale = (dk ** -0.5) if scale is None else scale
+    logits = jnp.einsum("bhsd,bhtd->bhst", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    if causal:
+        qi = q_offset + jnp.arange(s)[:, None]
+        kj = jnp.arange(t)[None, :]
+        logits = jnp.where(qi >= kj, logits, -jnp.inf)
+    probs = jnp.exp(logits - logits.max(axis=-1, keepdims=True))
+    probs = probs / probs.sum(axis=-1, keepdims=True)
+    out = jnp.einsum("bhst,bhtd->bhsd", probs, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def counts(b: int, h: int, s: int, t: int, dk: int, dv: int,
+           causal: bool = True, itemsize: int = 2) -> WorkCounts:
+    frac = 0.5 if causal and s == t else 1.0
+    macs = b * h * s * t * (dk + dv) * frac
+    io = b * (h * s * (dk + dv) + h * s * dv) * itemsize
+    return WorkCounts(ops=2.0 * macs, dcache_bytes=2.0 * macs * itemsize / 8,
+                      host_bytes=io, working_set=io)

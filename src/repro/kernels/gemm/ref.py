@@ -1,0 +1,43 @@
+"""Pure-jnp oracle + structural work counts for the GeMM kernel.
+
+The GeMM benchmark is the paper's vehicle for quantifying Tiny-OpenCL
+overheads (Fig 3): matrix sizes 32x32 .. 256x256, integer arithmetic (the
+e-GPU has no FPU).  ``counts()`` feeds the analytic machine model.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from ...core.machine import WorkCounts
+
+# Register-blocking reuse factor of the tuned Tiny-OpenCL GeMM kernel: each
+# thread computes a 4x1 strip of C keeping A values in registers, so each
+# loaded word is used ~4 times before returning to the D$.
+REGISTER_REUSE = 4
+# D$ tile edge used by the blocked kernel (3 * 32*32 * 4B = 12 KiB < 16 KiB).
+DCACHE_TILE = 32
+
+
+def gemm_ref(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """C = A @ B with an accumulator wide enough for the input dtype."""
+    acc = jnp.int32 if jnp.issubdtype(a.dtype, jnp.integer) else jnp.float32
+    return jnp.matmul(a.astype(acc), b.astype(acc),
+                      preferred_element_type=acc).astype(
+                          a.dtype if jnp.issubdtype(a.dtype, jnp.integer) else acc)
+
+
+def counts(m: int, n: int, k: int, itemsize: int = 4) -> WorkCounts:
+    macs = float(m) * n * k
+    # core <-> D$ traffic of the register-blocked inner loop
+    dcache = (2.0 * macs / REGISTER_REUSE + m * n) * itemsize
+    # host <-> D$ traffic of the two-level blocked kernel: compulsory
+    # (all three matrices once) + capacity re-streams of A/B panels, one
+    # reload per (register x tile) block — the kernel tiles to FIT the D$,
+    # so working_set stays under 16 KiB by construction.
+    compulsory = float(m * k + k * n + m * n) * itemsize
+    capacity = 2.0 * macs / (REGISTER_REUSE * DCACHE_TILE) * itemsize
+    host = compulsory + capacity
+    ws = 3.0 * DCACHE_TILE * DCACHE_TILE * itemsize
+    return WorkCounts(ops=macs, dcache_bytes=dcache, host_bytes=host,
+                      working_set=ws, barriers=0, divergence=0.0)

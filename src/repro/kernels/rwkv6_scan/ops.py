@@ -1,0 +1,77 @@
+"""Public RWKV-6 WKV op: Pallas on TPU, chunked-einsum XLA elsewhere.
+
+The XLA path mirrors the kernel's chunked math inside a lax.scan over
+chunks (O(1) HLO in T, exact same numerics discipline), so the dry-run
+compiles the same algorithm the TPU executes.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from ..common import pad_dim, use_interpret
+from .ref import counts, rwkv6_scan_ref, rwkv6_step_ref  # noqa: F401
+from .rwkv6_scan import rwkv6_scan_pallas
+
+
+def _chunk_body(u, chunk):
+    f32 = jnp.float32
+
+    def body(s0, xs):
+        r, k, v, w = xs                                  # (B, H, C, D)
+        lw = jnp.cumsum(jnp.log(w), axis=2)
+        lw_prev = lw - jnp.log(w)
+        diff = lw_prev[:, :, :, None, :] - lw[:, :, None, :, :]  # (B,H,C,C,D)
+        ti = jnp.arange(chunk)[:, None]
+        si = jnp.arange(chunk)[None, :]
+        strict = (ti > si)[None, None, :, :, None]
+        decay = jnp.where(strict, jnp.exp(jnp.where(strict, diff, 0.0)), 0.0)
+        a = jnp.einsum("bhti,bhtsi,bhsi->bhts", r, decay, k)
+        a_diag = jnp.einsum("bhti,hi,bhti->bht", r, u, k)
+        eye = (ti == si)[None, None].astype(f32)
+        a = a + a_diag[..., None] * eye
+        y = jnp.einsum("bhts,bhsd->bhtd", a, v)
+        y = y + jnp.einsum("bhti,bhij->bhtj", r * jnp.exp(lw_prev), s0)
+        w_total = jnp.exp(lw[:, :, -1])                  # (B, H, D)
+        k_scaled = k * jnp.exp(lw[:, :, -1:, :] - lw)
+        s = (w_total[..., :, None] * s0
+             + jnp.einsum("bhti,bhtd->bhid", k_scaled, v))
+        return s, y
+
+    return body
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "impl"))
+def rwkv6_scan(r: jax.Array, k: jax.Array, v: jax.Array, w: jax.Array,
+               u: jax.Array, state0: jax.Array | None = None, *,
+               chunk: int = 32, impl: str = "auto"):
+    """RWKV-6 WKV over a sequence: r/k/v/w (B,H,T,D), u (H,D).
+
+    Returns (y (B,H,T,D), final_state (B,H,D,D) fp32).  T is padded to the
+    chunk size internally (w=1, k=0 padding is exact: it neither decays the
+    state nor contributes outputs).
+    """
+    b, h, t, d = r.shape
+    if impl == "auto":
+        impl = "xla" if use_interpret() else "pallas"
+    tp = -(-t // chunk) * chunk
+    if tp != t:
+        r = pad_dim(r, 2, chunk)
+        k = pad_dim(k, 2, chunk)
+        v = pad_dim(v, 2, chunk)
+        w = pad_dim(w, 2, chunk, fill=1)
+    f32 = jnp.float32
+    if impl == "pallas" and state0 is None:
+        y, s = rwkv6_scan_pallas(r, k, v, w, u, chunk=chunk)
+    else:
+        s0 = (jnp.zeros((b, h, d, d), f32) if state0 is None
+              else state0.astype(f32))
+        xs = tuple(
+            jnp.moveaxis(x.astype(f32).reshape(b, h, tp // chunk, chunk, d),
+                         2, 0) for x in (r, k, v, w))
+        s, ys = jax.lax.scan(_chunk_body(u.astype(f32), chunk), s0, xs)
+        y = jnp.moveaxis(ys, 0, 2).reshape(b, h, tp, d).astype(r.dtype)
+    return y[:, :, :t], s

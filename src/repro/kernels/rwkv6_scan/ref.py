@@ -1,0 +1,57 @@
+"""Pure-jnp oracle for the RWKV-6 (Finch) WKV recurrence.
+
+Per head with dims (D_k = D_v = D), data-dependent per-channel decay
+w_t in (0, 1) and per-channel bonus u:
+
+    y_t[j]   = sum_i r_t[i] * (S_{t-1}[i, j] + u[i] * k_t[i] * v_t[j])
+    S_t[i,j] = w_t[i] * S_{t-1}[i, j] + k_t[i] * v_t[j]
+
+The oracle is the exact sequential scan (lax.scan over time, O(1) HLO).
+All math in fp32.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ...core.machine import WorkCounts
+
+
+def rwkv6_scan_ref(r, k, v, w, u, state0=None):
+    """r/k/v/w (B, H, T, D), u (H, D); returns (y (B,H,T,D), state (B,H,D,D)).
+
+    ``state0`` (B, H, D, D) seeds the recurrence (decode / chunk chaining).
+    """
+    b, h, t, d = r.shape
+    f32 = jnp.float32
+    r, k, v, w = (x.astype(f32) for x in (r, k, v, w))
+    u = u.astype(f32)
+    s0 = (jnp.zeros((b, h, d, d), f32) if state0 is None
+          else state0.astype(f32))
+
+    def step(s, xs):
+        rt, kt, vt, wt = xs                       # (B, H, D) each
+        kv = kt[..., :, None] * vt[..., None, :]  # (B, H, D, D)
+        y = jnp.einsum("bhi,bhij->bhj", rt, s + u[None, :, :, None] * kv)
+        s = wt[..., :, None] * s + kv
+        return s, y
+
+    xs = tuple(jnp.moveaxis(x, 2, 0) for x in (r, k, v, w))
+    state, ys = jax.lax.scan(step, s0, xs)
+    return jnp.moveaxis(ys, 0, 2).astype(r.dtype), state
+
+
+def rwkv6_step_ref(r, k, v, w, u, state):
+    """Single decode step: r/k/v/w (B, H, D), state (B, H, D, D)."""
+    y, s = rwkv6_scan_ref(r[:, :, None], k[:, :, None], v[:, :, None],
+                          w[:, :, None], u, state)
+    return y[:, :, 0], s
+
+
+def counts(b: int, h: int, t: int, d: int, itemsize: int = 4) -> WorkCounts:
+    # per step: kv outer (D^2), state update (2 D^2), readout (2 D^2)
+    ops = 5.0 * b * h * t * d * d
+    io = 4.0 * b * h * t * d * itemsize
+    return WorkCounts(ops=ops, dcache_bytes=ops / 5 * itemsize,
+                      host_bytes=io, working_set=b * h * d * d * itemsize)

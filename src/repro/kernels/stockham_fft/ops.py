@@ -1,0 +1,41 @@
+"""jit'd public wrapper for the Stockham FFT + TinyCL registration."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ...core.device import EGPU_16T, EGPUConfig
+from ...core.runtime import Kernel
+from .ref import counts as fft_counts, stockham_fft_ref
+from .stockham_fft import fft_pallas
+
+
+@jax.jit
+def fft(re: jax.Array, im: jax.Array | None = None):
+    """FFT of a 1-D (or batched 2-D) signal; returns (re, im)."""
+    if im is None:
+        im = jnp.zeros_like(re)
+    squeeze = re.ndim == 1
+    if squeeze:
+        re, im = re[None, :], im[None, :]
+    ore, oim = fft_pallas(re, im)
+    return (ore[0], oim[0]) if squeeze else (ore, oim)
+
+
+def power_spectrum(x: jax.Array) -> jax.Array:
+    """|FFT|^2 — the frequency-domain features of the TinyBio pipeline."""
+    re, im = fft(x.astype(jnp.float32))
+    return re * re + im * im
+
+
+def make_kernel(config: EGPUConfig = EGPU_16T, use_pallas: bool = True) -> Kernel:
+    def ref_exec(re, im=None):
+        if im is None:
+            im = jnp.zeros_like(re)
+        return stockham_fft_ref(re, im)
+    return Kernel(
+        name="stockham_fft",
+        executor=fft if use_pallas else ref_exec,
+        counts=lambda n, itemsize=4: fft_counts(n, itemsize),
+    )

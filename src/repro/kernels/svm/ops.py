@@ -1,0 +1,37 @@
+"""jit'd public wrapper for the SVM kernel + TinyCL registration."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from ...core.device import EGPU_16T, EGPUConfig
+from ...core.runtime import Kernel
+from ..common import pad_dim
+from .ref import counts as svm_counts, svm_decision_ref
+from .svm import svm_pallas
+
+
+@functools.partial(jax.jit, static_argnames=("gamma",))
+def svm_decision(x: jax.Array, sv: jax.Array, alpha: jax.Array, b,
+                 gamma: float | None = None) -> jax.Array:
+    """Decision values for any (q, d) x (m, d); pads q to 8 and m to 128
+    (padded support vectors carry alpha = 0, so they contribute nothing)."""
+    q, d = x.shape
+    m = sv.shape[0]
+    xp = pad_dim(x, 0, 8)
+    svp = pad_dim(sv, 0, 128)
+    ap = pad_dim(alpha, 0, 128)
+    out = svm_pallas(xp, svp, ap, bq=xp.shape[0], bm=128, gamma=gamma)
+    return out[:q] + b
+
+
+def make_kernel(config: EGPUConfig = EGPU_16T, use_pallas: bool = True) -> Kernel:
+    exe = svm_decision if use_pallas else svm_decision_ref
+    return Kernel(
+        name="svm",
+        executor=exe,
+        counts=lambda q, m, d, itemsize=4, rbf=True: svm_counts(q, m, d, itemsize, rbf),
+    )

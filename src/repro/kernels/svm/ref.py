@@ -1,0 +1,49 @@
+"""Pure-jnp oracle + counts for the SVM decision function (TinyBio stage 4).
+
+MBio-Tracker's final stage classifies cognitive workload from the extracted
+features with a support vector machine.  We implement the kernelized decision
+function
+
+    f(x) = sum_i alpha_i * K(sv_i, x) + b
+
+for linear (K = <sv, x>) and RBF (K = exp(-gamma * ||sv - x||^2)) kernels.
+The distance matrix is computed MXU-style: ||a-b||^2 = |a|^2 + |b|^2 - 2 a.b,
+so the hot loop is a GEMM — the same compute structure the Pallas kernel
+tiles.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from ...core.machine import WorkCounts
+
+
+def svm_decision_ref(x: jnp.ndarray, sv: jnp.ndarray, alpha: jnp.ndarray,
+                     b, gamma: float | None = None) -> jnp.ndarray:
+    """Decision values for queries ``x`` (q, d) against support vectors
+    ``sv`` (m, d) with dual coefficients ``alpha`` (m,).  ``gamma=None``
+    selects the linear kernel."""
+    x = x.astype(jnp.float32)
+    sv = sv.astype(jnp.float32)
+    dots = x @ sv.T                                    # (q, m) — the GEMM
+    if gamma is None:
+        k = dots
+    else:
+        d2 = (jnp.sum(x * x, axis=1, keepdims=True)
+              + jnp.sum(sv * sv, axis=1)[None, :] - 2.0 * dots)
+        k = jnp.exp(-gamma * jnp.maximum(d2, 0.0))
+    return k @ alpha.astype(jnp.float32) + b
+
+
+def svm_predict_ref(x, sv, alpha, b, gamma=None) -> jnp.ndarray:
+    return (svm_decision_ref(x, sv, alpha, b, gamma) > 0).astype(jnp.int32)
+
+
+def counts(q: int, m: int, d: int, itemsize: int = 4,
+           rbf: bool = True) -> WorkCounts:
+    macs = float(q) * m * d                      # the distance/dot GEMM
+    extra = float(q) * m * (6 if rbf else 1)     # norms, exp, alpha reduce
+    host = (q * d + m * (d + 1) + q) * itemsize
+    return WorkCounts(ops=macs + extra, dcache_bytes=2.0 * macs / 4 * itemsize,
+                      host_bytes=host, working_set=host)

@@ -1,0 +1,475 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+This is the proof that the distribution config is coherent without real
+hardware: ``jax.jit(step).lower(*abstract_args).compile()`` must succeed on
+the single-pod (16, 16) mesh AND the multi-pod (2, 16, 16) mesh for every
+live cell, and the compiled artifact yields the roofline inputs:
+
+* ``compiled.memory_analysis()``  — per-device bytes (proves it fits);
+* ``compiled.cost_analysis()``    — FLOPs / bytes for the compute & memory
+  roofline terms;
+* ``compiled.as_text()``          — collective ops parsed by
+  :mod:`repro.launch.hlo_stats` for the collective term.
+
+Artifacts are cached to ``artifacts/dryrun/<arch>__<shape>__<mesh>.json``;
+``benchmarks/bench_roofline.py`` and EXPERIMENTS.md read from there, so
+nothing ever recompiles twice.
+
+NOTE the two lines above this docstring: 512 placeholder host devices MUST
+be requested before jax (transitively) initializes — and must NOT leak into
+conftest/pyproject, where smoke tests expect 1 device.
+"""
+
+import argparse
+import json
+import time
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..configs import ARCHS, SHAPES, cells, input_specs
+from ..distributed.sharding import (SERVE_RULES, TRAIN_RULES, ShardingRules,
+                                    activate, param_specs, spec_for,
+                                    train_rules_for)
+from ..models.config import ModelConfig
+from ..models.params import abstract_params
+from ..models.transformer import cache_axes, cache_struct, model_spec
+from ..optim import wsd_schedule
+from ..train.serve import make_decode_step, make_prefill_step
+from ..train.step import TrainConfig, make_train_step
+from .hlo_cost import analyze_hlo, cpu_f32_shadow_bytes
+from .mesh import make_production_mesh
+
+DEFAULT_OUT = "artifacts/dryrun"
+
+# TPU v5e constants (per chip) for the roofline terms recorded alongside.
+PEAK_FLOPS_BF16 = 197e12        # FLOP/s
+HBM_BW = 819e9                  # B/s
+ICI_BW = 50e9                   # B/s per link
+
+
+# ---------------------------------------------------------------------------
+# Per-cell execution regime (remat / microbatching / dtypes)
+# ---------------------------------------------------------------------------
+def cell_train_config(cfg: ModelConfig) -> TrainConfig:
+    """Scale remat & microbatching with model size so every cell fits v5e.
+
+    remat="full" per layer group everywhere: the only fwd→bwd residual is
+    the per-group carry (B_local x S x D bf16 per group), and microbatching
+    bounds even that ("dots" saves every projection output across the scan —
+    measured 3x the temp bytes on stablelm train_4k, see EXPERIMENTS §Perf).
+    jamba-398B additionally stores params/grads in bf16 (DESIGN.md §5:
+    12 B/param fp32-Adam does not fit 16 GiB at 398B/256 chips; bf16 params
+    + bf16 moments = 6 B/param does).
+    """
+    n = cfg.param_count()
+    if n > 3e11:
+        # ub=8 (not 16): grads reduce-scatter once per microbatch, so fewer
+        # microbatches halve the dominant gradient-reduction traffic
+        # (jamba train_4k: 178s -> measured below in §Perf) while remat
+        # carries stay ~1.2 GiB
+        return TrainConfig(remat="full", microbatches=8,
+                           param_dtype="bfloat16")
+    if n > 1e11:
+        # deep stacks (88L mistral / 60L deepseek): per-layer remat carries
+        # are n_groups x (B_ub/16, S, D) bf16 — 1 seq/device per microbatch
+        # keeps them under ~9 GiB
+        return TrainConfig(remat="full", microbatches=16)
+    if n > 2e10:
+        return TrainConfig(remat="full", microbatches=4)
+    # small models run pure-DP over all chips: the per-microbatch batch must
+    # stay >= the 256-way batch sharding, so no microbatching here (B=256)
+    return TrainConfig(remat="full", microbatches=1)
+
+
+def _axes_leaf(x) -> bool:
+    return isinstance(x, tuple) and all(
+        isinstance(e, (str, type(None))) for e in x)
+
+
+def _ns(mesh, logical, shape) -> NamedSharding:
+    return NamedSharding(mesh, spec_for(logical, None, mesh, tuple(shape)))
+
+
+def _batch_shardings(batch_struct, mesh, rules, *, shard_seq: bool):
+    out = {}
+    for k, st in batch_struct.items():
+        if st.ndim == 1:
+            logical = ("batch",)
+        elif k in ("patches",):
+            logical = ("batch", None, None)
+        elif st.ndim == 3:          # frames
+            logical = ("batch", "seq" if shard_seq else None, None)
+        else:                       # tokens / labels (B, S)
+            logical = ("batch", "seq" if shard_seq else None)
+        with activate(rules, mesh):
+            out[k] = _ns(mesh, logical, st.shape)
+    return out
+
+
+def _tree_shardings(axes_tree, struct_tree, mesh, rules):
+    with activate(rules, mesh):
+        return jax.tree_util.tree_map(
+            lambda ax, st: _ns(mesh, ax, st.shape),
+            axes_tree, struct_tree, is_leaf=_axes_leaf)
+
+
+def _replicated_like(struct_tree, mesh):
+    return jax.tree_util.tree_map(
+        lambda _: NamedSharding(mesh, P()), struct_tree)
+
+
+# ---------------------------------------------------------------------------
+# Cell builders: return (jitted_fn, args_structs)
+# ---------------------------------------------------------------------------
+def build_train_cell(cfg: ModelConfig, shape, mesh, rules: ShardingRules,
+                     tcfg: Optional[TrainConfig] = None):
+    tcfg = tcfg or cell_train_config(cfg)
+    spec_tree = model_spec(cfg)
+    pdtype = jnp.dtype(tcfg.param_dtype)
+    params_struct = abstract_params(spec_tree, dtype=pdtype)
+    mom = jax.tree_util.tree_map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, jnp.bfloat16), params_struct)
+    state_struct = {"params": params_struct,
+                    "opt": {"m": mom, "v": mom,
+                            "step": jax.ShapeDtypeStruct((), jnp.int32)}}
+    p_specs = param_specs(spec_tree, rules, mesh)
+    p_sh = jax.tree_util.tree_map(lambda s: NamedSharding(mesh, s), p_specs)
+    state_sh = {"params": p_sh,
+                "opt": {"m": p_sh, "v": p_sh,
+                        "step": NamedSharding(mesh, P())}}
+    batch_struct = input_specs(cfg.name, shape.name)
+    batch_sh = _batch_shardings(batch_struct, mesh, rules, shard_seq=False)
+
+    step = make_train_step(cfg, tcfg, wsd_schedule(3e-4, 10_000))
+
+    def wrapped(state, batch):
+        with activate(rules, mesh):
+            return step(state, batch)
+
+    _, metrics_struct = jax.eval_shape(wrapped, state_struct, batch_struct)
+    out_sh = (state_sh, _replicated_like(metrics_struct, mesh))
+    jitted = jax.jit(wrapped, in_shardings=(state_sh, batch_sh),
+                     out_shardings=out_sh, donate_argnums=(0,))
+    return jitted, (state_struct, batch_struct), tcfg
+
+
+def build_prefill_cell(cfg: ModelConfig, shape, mesh, rules: ShardingRules):
+    spec_tree = model_spec(cfg)
+    params_struct = abstract_params(spec_tree, dtype=jnp.bfloat16)
+    p_sh = jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), param_specs(spec_tree, rules, mesh))
+    batch_struct = input_specs(cfg.name, shape.name)
+    batch_sh = _batch_shardings(batch_struct, mesh, rules, shard_seq=True)
+
+    fn = make_prefill_step(cfg, max_len=shape.seq_len)
+
+    def wrapped(params, inputs):
+        with activate(rules, mesh):
+            return fn(params, inputs)
+
+    out_struct = jax.eval_shape(wrapped, params_struct, batch_struct)
+    with activate(rules, mesh):
+        if cfg.is_encoder:
+            out_sh = _ns(mesh, ("batch", "seq", "vocab"), out_struct.shape)
+        else:
+            logits_struct, cache_out_struct = out_struct
+            logits_sh = _ns(mesh, ("batch", "vocab"), logits_struct.shape)
+            cache_sh = _tree_shardings(cache_axes(cfg), cache_out_struct,
+                                       mesh, rules)
+            out_sh = (logits_sh, cache_sh)
+    jitted = jax.jit(wrapped, in_shardings=(p_sh, batch_sh),
+                     out_shardings=out_sh)
+    return jitted, (params_struct, batch_struct), None
+
+
+def build_decode_cell(cfg: ModelConfig, shape, mesh, rules: ShardingRules):
+    spec_tree = model_spec(cfg)
+    params_struct = abstract_params(spec_tree, dtype=jnp.bfloat16)
+    p_sh = jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), param_specs(spec_tree, rules, mesh))
+    b, t = shape.global_batch, shape.seq_len
+    c_struct = cache_struct(cfg, b, t)
+    c_sh = _tree_shardings(cache_axes(cfg), c_struct, mesh, rules)
+    tok_struct = jax.ShapeDtypeStruct((b,), jnp.int32)
+    pos_struct = jax.ShapeDtypeStruct((), jnp.int32)
+
+    fn = make_decode_step(cfg)
+
+    def wrapped(params, cache, tokens, pos):
+        with activate(rules, mesh):
+            return fn(params, cache, tokens, pos)
+
+    with activate(rules, mesh):
+        tok_sh = _ns(mesh, ("batch",), (b,))
+        _, logits_struct, _ = jax.eval_shape(
+            wrapped, params_struct, c_struct, tok_struct, pos_struct)
+        logits_sh = _ns(mesh, ("batch", "vocab"), logits_struct.shape)
+    out_sh = (tok_sh, logits_sh, c_sh)
+    jitted = jax.jit(wrapped,
+                     in_shardings=(p_sh, c_sh, tok_sh,
+                                   NamedSharding(mesh, P())),
+                     out_shardings=out_sh, donate_argnums=(1,))
+    return jitted, (params_struct, c_struct, tok_struct, pos_struct), None
+
+
+BUILDERS = {"train": build_train_cell, "prefill": build_prefill_cell,
+            "decode": build_decode_cell}
+
+
+# ---------------------------------------------------------------------------
+# Run one cell: lower, compile, extract roofline inputs
+# ---------------------------------------------------------------------------
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
+             out_dir: str = DEFAULT_OUT, rules: Optional[ShardingRules] = None,
+             tag: str = "", force: bool = False,
+             keep_hlo: bool = False) -> Dict[str, Any]:
+    cfg = ARCHS[arch]
+    shape = SHAPES[shape_name]
+    mesh_name = "multipod" if multi_pod else "pod"
+    cell_id = f"{arch}__{shape_name}__{mesh_name}" + (f"__{tag}" if tag else "")
+    path = os.path.join(out_dir, cell_id + ".json")
+    if os.path.exists(path) and not force:
+        with open(path) as f:
+            return json.load(f)
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_dev = mesh.devices.size
+    if rules is None:
+        rules = (train_rules_for(cfg.param_count())
+                 if shape.kind == "train" else SERVE_RULES)
+
+    t0 = time.time()
+    builder = BUILDERS[shape.kind]
+    jitted, arg_structs, tcfg = builder(cfg, shape, mesh, rules)
+    with mesh:
+        lowered = jitted.lower(*arg_structs)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    mem = compiled.memory_analysis()
+    print(f"[{cell_id}] memory_analysis: {mem}", flush=True)   # proves fit
+    xla_cost = compiled.cost_analysis()
+    xla_cost = xla_cost[0] if isinstance(xla_cost, list) else xla_cost
+    print(f"[{cell_id}] cost_analysis: flops={xla_cost.get('flops')} "
+          f"bytes={xla_cost.get('bytes accessed')} (raw XLA; scan-aware "
+          "figures in the artifact)", flush=True)
+    hlo = compiled.as_text()
+    cost = analyze_hlo(hlo)       # scan-aware (cost_analysis counts a
+    #                               while body ONCE — see hlo_cost.py)
+
+    tokens = shape.global_batch * (1 if shape.kind == "decode"
+                                   else shape.seq_len)
+    n_active = cfg.active_param_count()
+    model_flops = (6.0 if shape.kind == "train" else 2.0) * n_active * tokens
+
+    record: Dict[str, Any] = {
+        "cell": cell_id, "arch": arch, "shape": shape_name,
+        "mesh": mesh_name, "n_devices": n_dev, "kind": shape.kind,
+        "rules": rules.name,
+        "train_config": (dataclass_dict(tcfg) if tcfg else None),
+        "lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2),
+        "memory": {
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+            "output_bytes": getattr(mem, "output_size_in_bytes", None),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+            "alias_bytes": getattr(mem, "alias_size_in_bytes", None),
+            # CPU-only f32 twins of bf16 buffers (no native bf16 dot on
+            # this host); they do not exist on the TPU target:
+            "cpu_f32_shadow_bytes": cpu_f32_shadow_bytes(hlo),
+            "generated_code_bytes": getattr(
+                mem, "generated_code_size_in_bytes", None),
+        },
+        "cost": {"flops": cost["flops"],
+                 "bytes_accessed": cost["bytes_accessed"],
+                 "transcendentals": cost["transcendentals"],
+                 "unknown_trip_counts": cost["unknown_trip_counts"]},
+        "xla_cost_raw": {"flops": xla_cost.get("flops"),
+                         "bytes_accessed": xla_cost.get("bytes accessed")},
+        "collectives": {
+            "total_link_bytes": cost["total_link_bytes"],
+            "by_kind": cost["collective_link_bytes"],
+            "by_group_size": cost["collective_by_group_size"]},
+        "model_flops_global": model_flops,
+        "tokens": tokens,
+        "params_total": cfg.param_count(),
+        "params_active": n_active,
+    }
+    m = record["memory"]
+    if m["argument_bytes"] is not None:
+        m["tpu_projected_bytes"] = (m["argument_bytes"] + m["temp_bytes"]
+                                    - m["cpu_f32_shadow_bytes"])
+    record["memory_budget"] = analytic_memory_budget(
+        cfg, shape, mesh, rules, tcfg)
+    record["roofline"] = roofline_terms(record)
+    os.makedirs(out_dir, exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(record, f, indent=1)
+    if keep_hlo:
+        with open(os.path.join(out_dir, cell_id + ".hlo.txt"), "w") as f:
+            f.write(hlo)
+    return record
+
+
+def dataclass_dict(tcfg: TrainConfig) -> Dict[str, Any]:
+    return {"remat": tcfg.remat, "microbatches": tcfg.microbatches,
+            "param_dtype": tcfg.param_dtype}
+
+
+def analytic_memory_budget(cfg: ModelConfig, shape, mesh, rules,
+                           tcfg: Optional[TrainConfig]) -> Dict[str, float]:
+    """Exact per-device HBM budget from configs + sharding rules.
+
+    ``compiled.memory_analysis()`` on this CPU host includes f32 shadows of
+    every bf16 dot operand and backend scheduling transients that do not
+    exist on the TPU target, so the deployment budget is computed
+    analytically: each parameter leaf's bytes are divided by its actual
+    shard count (via param_specs), optimizer/grads follow the params, and
+    the activation terms follow the remat/microbatch policy.  This is the
+    "fits in 16 GiB" evidence in EXPERIMENTS §Dry-run.
+    """
+    import numpy as np
+    from ..models.params import is_spec
+
+    spec_tree = model_spec(cfg)
+    specs = param_specs(spec_tree, rules, mesh)
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+
+    def shards(pspec):
+        n = 1
+        for entry in pspec:
+            if entry is None:
+                continue
+            for ax in ((entry,) if isinstance(entry, str) else entry):
+                n *= sizes.get(ax, 1)
+        return n
+
+    leaves = jax.tree_util.tree_leaves(spec_tree, is_leaf=is_spec)
+    pspecs = jax.tree_util.tree_leaves(specs, is_leaf=lambda x: hasattr(x, "index") or x.__class__.__name__ == "PartitionSpec")
+    param_elems_sharded = sum(float(np.prod(s.shape)) / shards(ps)
+                              for s, ps in zip(leaves, pspecs))
+    nonexpert_group = sum(
+        float(np.prod(s.shape)) / max(1, sizes.get("model", 1))
+        for s, ps in zip(leaves, pspecs)
+        if "expert" not in (s.axes or ()) and "layers" in (s.axes or ())
+    ) / max(1, cfg.n_groups)
+
+    out: Dict[str, float] = {}
+    gib = 2.0 ** 30
+    dp = sizes.get("data", 1) * sizes.get("pod", 1)
+    if shape.kind == "train":
+        pbytes = 4 if tcfg.param_dtype == "float32" else 2
+        out["params"] = param_elems_sharded * pbytes / gib
+        out["adam_moments"] = param_elems_sharded * 2 * 2 / gib
+        out["grads"] = param_elems_sharded * pbytes / gib
+        b_local = max(1, shape.global_batch // tcfg.microbatches // dp)
+        out["remat_carries"] = (cfg.n_groups * b_local * shape.seq_len
+                                * cfg.d_model * 2) / gib
+        out["gathered_group_weights_x2"] = nonexpert_group * 2 * 2 / gib
+        out["logits_ub"] = (b_local * shape.seq_len
+                            * cfg.vocab_padded / max(1, sizes.get("model", 1))
+                            * 4) / gib
+    else:
+        out["params"] = param_elems_sharded * 2 / gib
+        if shape.kind == "decode":
+            cache = cache_struct(cfg, shape.global_batch, shape.seq_len)
+            c_leaves = jax.tree_util.tree_leaves(cache)
+            ax_leaves = jax.tree_util.tree_leaves(cache_axes(cfg),
+                                                  is_leaf=_axes_leaf)
+            total = 0.0
+            for st, ax in zip(c_leaves, ax_leaves):
+                ps = spec_for(ax, rules, mesh, st.shape)
+                total += (float(np.prod(st.shape)) * st.dtype.itemsize
+                          / shards(ps))
+            out["cache"] = total / gib
+        else:
+            b_local = max(1, shape.global_batch // dp)
+            s_local = shape.seq_len // max(1, sizes.get("model", 1))
+            out["activations"] = (4 * b_local * s_local * cfg.d_model * 2
+                                  ) / gib
+        if shape.kind == "prefill" and not cfg.is_encoder:
+            cache = cache_struct(cfg, shape.global_batch, shape.seq_len)
+            c_leaves = jax.tree_util.tree_leaves(cache)
+            ax_leaves = jax.tree_util.tree_leaves(cache_axes(cfg),
+                                                  is_leaf=_axes_leaf)
+            total = 0.0
+            for st, ax in zip(c_leaves, ax_leaves):
+                ps = spec_for(ax, rules, mesh, st.shape)
+                total += (float(np.prod(st.shape)) * st.dtype.itemsize
+                          / shards(ps))
+            out["cache_out"] = total / gib
+    out["total_gib"] = round(sum(out.values()), 2)
+    return {k: round(v, 3) for k, v in out.items()}
+
+
+def roofline_terms(rec: Dict[str, Any]) -> Dict[str, Any]:
+    """The three roofline terms in seconds (per §Roofline).
+
+    ``cost_analysis`` FLOPs/bytes are per-device post-SPMD, so the per-chip
+    division is already applied; collective link bytes are per device too.
+    """
+    n = rec["n_devices"]
+    flops = rec["cost"]["flops"] or 0.0
+    bytes_acc = rec["cost"]["bytes_accessed"] or 0.0
+    link = rec["collectives"]["total_link_bytes"]
+    t_compute = flops / PEAK_FLOPS_BF16
+    t_memory = bytes_acc / HBM_BW
+    t_coll = link / ICI_BW
+    dominant = max((("compute", t_compute), ("memory", t_memory),
+                    ("collective", t_coll)), key=lambda kv: kv[1])[0]
+    useful = rec["model_flops_global"] / max(flops * n, 1.0)
+    bound = max(t_compute, t_memory, t_coll)
+    return {
+        "t_compute_s": t_compute, "t_memory_s": t_memory,
+        "t_collective_s": t_coll, "dominant": dominant,
+        "model_flops_ratio": useful,
+        "roofline_fraction": t_compute / bound if bound else 0.0,
+    }
+
+
+# ---------------------------------------------------------------------------
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default=None, help="architecture id (or all)")
+    ap.add_argument("--shape", default=None, help="shape name (or all)")
+    ap.add_argument("--mesh", default="pod", choices=["pod", "multipod", "both"])
+    ap.add_argument("--out", default=DEFAULT_OUT)
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--keep-hlo", action="store_true")
+    args = ap.parse_args()
+
+    grid = [(a, s) for a, s, _ in cells()
+            if (args.arch in (None, "all", a))
+            and (args.shape in (None, "all", s))]
+    meshes = {"pod": [False], "multipod": [True], "both": [False, True]}
+    failures = []
+    for arch, shape in grid:
+        for mp in meshes[args.mesh]:
+            name = f"{arch} x {shape} x {'multipod' if mp else 'pod'}"
+            try:
+                rec = run_cell(arch, shape, multi_pod=mp, out_dir=args.out,
+                               force=args.force, keep_hlo=args.keep_hlo)
+                r = rec["roofline"]
+                print(f"[ok] {name}: compile={rec['compile_s']}s "
+                      f"dominant={r['dominant']} "
+                      f"t=({r['t_compute_s']:.3e},{r['t_memory_s']:.3e},"
+                      f"{r['t_collective_s']:.3e})s", flush=True)
+            except Exception as e:  # noqa: BLE001 — report and continue
+                failures.append((name, repr(e)))
+                print(f"[FAIL] {name}: {e!r}", flush=True)
+    if failures:
+        print(f"\n{len(failures)} cell(s) failed:")
+        for n, e in failures:
+            print(" -", n, e)
+        raise SystemExit(1)
+    print(f"\nall {len(grid) * len(meshes[args.mesh])} cells compiled")
+
+
+if __name__ == "__main__":
+    main()

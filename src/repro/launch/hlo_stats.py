@@ -1,0 +1,114 @@
+"""Parse collective traffic out of lowered/compiled HLO text.
+
+``compiled.cost_analysis()`` reports FLOPs and bytes-accessed but NOT
+collective bytes, so the roofline's third term is derived here: every
+``all-gather`` / ``all-reduce`` / ``reduce-scatter`` / ``all-to-all`` /
+``collective-permute`` op is extracted from the HLO text together with its
+result shape and replica-group size, and converted to *per-device link
+bytes* with the standard ring-algorithm accounting:
+
+    all-gather          (N-1)/N x result_bytes
+    reduce-scatter      (N-1)/N x operand_bytes   (= N x result)
+    all-reduce        2 (N-1)/N x operand_bytes   (RS + AG)
+    all-to-all          (N-1)/N x operand_bytes
+    collective-permute  operand_bytes
+
+N is the replica-group size parsed per op, so in-pod (N=16) and cross-pod
+(N=2) collectives are costed separately.  The parser works on both
+``lowered.as_text()`` (pre-SPMD: partition counts symbolic) and
+``compiled.as_text()`` (post-SPMD partitioner: concrete per-device shapes) —
+the dry-run uses the compiled form.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+from typing import Dict, List, Optional
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_OP_RE = re.compile(
+    r"=\s*((?:\([^)]*\))|(?:\w+\[[\d,]*\][^ ]*))\s*"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(")
+_GROUPS_RE = re.compile(r"replica_groups=\{(\{[^}]*\})")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(text):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    """Per-kind per-device link-byte totals for one HLO module."""
+
+    ops: List[dict]
+
+    @property
+    def by_kind(self) -> Dict[str, float]:
+        out: Dict[str, float] = defaultdict(float)
+        for op in self.ops:
+            out[op["kind"]] += op["link_bytes"]
+        return dict(out)
+
+    @property
+    def total_link_bytes(self) -> float:
+        return sum(op["link_bytes"] for op in self.ops)
+
+    def summary(self) -> Dict[str, float]:
+        return {"total_link_bytes": self.total_link_bytes,
+                "n_ops": len(self.ops), **self.by_kind}
+
+
+def parse_collectives(hlo_text: str) -> CollectiveStats:
+    ops = []
+    for line in hlo_text.splitlines():
+        m = _OP_RE.search(line)
+        if not m:
+            continue
+        result_shape, kind = m.group(1), m.group(2)
+        result_bytes = _shape_bytes(result_shape)
+
+        n = _group_size(line)
+        frac = (n - 1) / n if n > 1 else 0.0
+        if kind == "all-gather":
+            link = frac * result_bytes
+        elif kind == "reduce-scatter":
+            link = frac * result_bytes * n
+        elif kind == "all-reduce":
+            link = 2 * frac * result_bytes
+        elif kind == "all-to-all":
+            link = frac * result_bytes
+        else:  # collective-permute
+            link = result_bytes
+        ops.append({"kind": kind, "result_bytes": result_bytes,
+                    "group_size": n, "link_bytes": link})
+    return CollectiveStats(ops)
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_RE.search(line)
+    if m:
+        first = m.group(1).strip("{}")
+        return len([x for x in first.split(",") if x.strip() != ""])
+    return 2

@@ -1,0 +1,94 @@
+"""Straggler mitigation: timeout-and-backup dispatch for train steps.
+
+At 1000+-node scale the slowest participant sets the step time; hosts also
+stall on preemption, page faults or flaky NICs.  Because this framework's
+data pipeline is a pure function of (seed, step) and steps are functional,
+a straggling dispatch can simply be RACED by a backup dispatch of the SAME
+step — whichever completes first wins, and determinism guarantees they are
+identical (the TPU-side analogue is re-queuing the program on a healthy
+slice; the host-side mechanics are what we can exercise here).
+
+:class:`BackupStepRunner` wraps a jitted step:
+
+* per-step wall time keeps an EMA;
+* a dispatch exceeding ``threshold x EMA`` (or ``hard_timeout_s``) gets a
+  backup dispatch; the first completion wins;
+* stragglers are counted and reported for the ops dashboard.
+
+Tests inject an artificial delay to exercise the backup path and verify
+result equality (tests/test_straggler.py).
+"""
+
+from __future__ import annotations
+
+import concurrent.futures
+import dataclasses
+import threading
+import time
+from typing import Any, Callable, Optional, Tuple
+
+import jax
+
+
+@dataclasses.dataclass
+class StragglerStats:
+    steps: int = 0
+    backups_fired: int = 0
+    backups_won: int = 0
+    ema_s: float = 0.0
+
+
+class BackupStepRunner:
+    """Races a backup dispatch when the primary step straggles."""
+
+    def __init__(self, step_fn: Callable[..., Any], *,
+                 threshold: float = 3.0, warmup_steps: int = 2,
+                 hard_timeout_s: float = 120.0,
+                 delay_hook: Optional[Callable[[int], float]] = None):
+        """``delay_hook(step) -> seconds`` injects artificial straggle into
+        the PRIMARY dispatch (test/simulation only)."""
+        self.step_fn = step_fn
+        self.threshold = threshold
+        self.warmup = warmup_steps
+        self.hard_timeout_s = hard_timeout_s
+        self.delay_hook = delay_hook
+        self.stats = StragglerStats()
+        self._pool = concurrent.futures.ThreadPoolExecutor(max_workers=2)
+
+    def _dispatch(self, args, kwargs, delay: float = 0.0):
+        if delay:
+            time.sleep(delay)
+        out = self.step_fn(*args, **kwargs)
+        jax.block_until_ready(out)
+        return out
+
+    def __call__(self, *args, **kwargs):
+        st = self.stats
+        step_idx = st.steps
+        delay = self.delay_hook(step_idx) if self.delay_hook else 0.0
+        t0 = time.perf_counter()
+        primary = self._pool.submit(self._dispatch, args, kwargs, delay)
+
+        budget = (self.hard_timeout_s if st.steps < self.warmup
+                  else min(self.hard_timeout_s,
+                           max(self.threshold * st.ema_s, 1e-3)))
+        backup = None
+        try:
+            out = primary.result(timeout=budget)
+        except concurrent.futures.TimeoutError:
+            st.backups_fired += 1
+            backup = self._pool.submit(self._dispatch, args, kwargs, 0.0)
+            done, _ = concurrent.futures.wait(
+                (primary, backup),
+                return_when=concurrent.futures.FIRST_COMPLETED)
+            winner = done.pop()
+            if winner is backup:
+                st.backups_won += 1
+            out = winner.result()
+        dt = time.perf_counter() - t0
+        st.ema_s = dt if st.steps == 0 else 0.8 * st.ema_s + 0.2 * dt
+        st.steps += 1
+        return out
+
+    def close(self):
+        self._pool.shutdown(wait=False, cancel_futures=True)

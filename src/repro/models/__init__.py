@@ -1,0 +1,13 @@
+"""repro.models — the architecture zoo for the 10 assigned configs."""
+
+from .config import ModelConfig
+from .params import (ParamSpec, abstract_params, init_params, logical_axes,
+                     param_bytes)
+from .transformer import (cache_struct, decode_step, forward, init_cache,
+                          model_spec, prefill, train_loss)
+
+__all__ = [
+    "ModelConfig", "ParamSpec", "abstract_params", "init_params",
+    "logical_axes", "param_bytes", "model_spec", "forward", "train_loss",
+    "prefill", "decode_step", "init_cache", "cache_struct",
+]

@@ -1,0 +1,58 @@
+"""Modality frontends — STUBS per the assignment.
+
+``[vlm]`` / ``[audio]`` archs specify the transformer *backbone* only; the
+SigLIP vision tower (paligemma) and the CNN feature encoder (hubert) are
+replaced by ``input_specs()`` handing the model *precomputed* patch/frame
+embeddings.  The only learned pieces here are the linear adapters that map
+frontend features into d_model (as both papers also have).
+"""
+
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .layers import cdtype, sinusoidal_positions
+from .params import ParamSpec, dense_spec
+
+VISION_FEATURE_DIM = 1152     # SigLIP-So400m output width (stubbed)
+AUDIO_FEATURE_DIM = 512       # wav2vec2/HuBERT CNN encoder output (stubbed)
+
+
+def frontend_spec(cfg: ModelConfig) -> Dict[str, ParamSpec]:
+    if cfg.frontend == "vision":
+        return {"proj": dense_spec(VISION_FEATURE_DIM, cfg.d_model,
+                                   (None, "embed"))}
+    if cfg.frontend == "audio":
+        return {"proj": dense_spec(AUDIO_FEATURE_DIM, cfg.d_model,
+                                   (None, "embed")),
+                "ln_scale": ParamSpec((cfg.d_model,), ("embed",), "ones"),
+                "ln_bias": ParamSpec((cfg.d_model,), ("embed",), "zeros")}
+    return {}
+
+
+def feature_dim(cfg: ModelConfig) -> int:
+    return VISION_FEATURE_DIM if cfg.frontend == "vision" else AUDIO_FEATURE_DIM
+
+
+def embed_vision(p, patches: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """Precomputed patch features (B, P, F) -> prefix embeddings (B, P, D)."""
+    dt = cdtype(cfg)
+    return jnp.dot(patches.astype(dt), p["proj"].astype(dt))
+
+
+def embed_audio(p, frames: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """Precomputed frame features (B, S, F) -> (B, S, D) with sinusoidal
+    positions (stand-in for hubert's conv positional encoder)."""
+    dt = cdtype(cfg)
+    x = jnp.dot(frames.astype(dt), p["proj"].astype(dt))
+    pos = sinusoidal_positions(x.shape[1], cfg.d_model).astype(dt)
+    x = x + pos[None]
+    xf = x.astype(jnp.float32)
+    mu = xf.mean(-1, keepdims=True)
+    var = xf.var(-1, keepdims=True)
+    xn = (xf - mu) * jax.lax.rsqrt(var + cfg.norm_eps)
+    return (xn * p["ln_scale"] + p["ln_bias"]).astype(dt)

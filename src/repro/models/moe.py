@@ -1,0 +1,172 @@
+"""Mixture-of-Experts layer: top-k routing, sort-based capacity dispatch, EP.
+
+Production dispatch path (GSPMD/EP-friendly, flop-light):
+
+1. tokens are viewed as (groups, g, D) with groups sharded over ``data`` —
+   one routing group per data shard (the Tiny-OpenCL "work-group" of this
+   layer, scheduled onto mesh shards exactly like the paper schedules
+   work-groups onto CUs);
+2. per-group: softmax router → top-k experts/weights per token;
+3. **sort-based dispatch**: assignments are ordered by expert id; each
+   token's position-in-expert comes from a stable argsort + running index,
+   tokens beyond the per-expert capacity ``c`` are dropped (their combine
+   weight is zeroed — standard GShard capacity semantics);
+4. dispatched activations land in an (E, c, D) buffer per group via a
+   one-hit scatter; expert weights are sharded E → ``model`` so GSPMD
+   all-to-alls tokens from data shards to expert shards;
+5. expert FFN (gated-SiLU) runs batched over its local experts;
+6. combine scatters weighted outputs back to token order.
+
+Aux losses: switch-style load-balance loss + router z-loss, returned to the
+trainer (summed over scan groups).
+
+Shared experts (deepseek-v2: 2) run densely on every token and add in.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..distributed.sharding import constrain
+from .config import ModelConfig
+from .layers import act_fn, cdtype
+from .params import ParamSpec, dense_spec
+
+
+# ---------------------------------------------------------------------------
+# Parameters
+# ---------------------------------------------------------------------------
+def moe_spec(cfg: ModelConfig, stacked: int = 0) -> Dict[str, ParamSpec]:
+    d = cfg.d_model
+    e = cfg.n_experts
+    ff = cfg.d_ff_expert or cfg.d_ff
+
+    def expert_w(din, dout, axes):
+        shape = (e, din, dout)
+        ax: Tuple = ("expert",) + axes
+        if stacked:
+            shape = (stacked,) + shape
+            ax = ("layers",) + ax
+        return ParamSpec(shape, ax, "normal", din ** -0.5)
+
+    out = {
+        "router": dense_spec(d, e, ("embed", None), stacked=stacked),
+        "wi": expert_w(d, ff, ("embed", "mlp")),
+        "wg": expert_w(d, ff, ("embed", "mlp")),
+        "wo": expert_w(ff, d, ("mlp", "embed")),
+    }
+    if cfg.n_shared_experts:
+        sff = ff * cfg.n_shared_experts
+        out["shared"] = {
+            "wi": dense_spec(d, sff, ("embed", "mlp"), stacked=stacked),
+            "wg": dense_spec(d, sff, ("embed", "mlp"), stacked=stacked),
+            "wo": dense_spec(sff, d, ("mlp", "embed"), stacked=stacked),
+        }
+    return out
+
+
+def capacity(cfg: ModelConfig, group_tokens: int) -> int:
+    """Per-expert slots per routing group (multiple of 8 for TPU tiling)."""
+    c = int(group_tokens * cfg.top_k * cfg.capacity_factor / cfg.n_experts)
+    return max(8, -(-c // 8) * 8)
+
+
+# ---------------------------------------------------------------------------
+# Routing + dispatch (per group, vmapped)
+# ---------------------------------------------------------------------------
+def _route_group(x: jax.Array, logits: jax.Array, cfg: ModelConfig, c: int):
+    """x (g, D), logits (g, E) -> dispatched (E*c, D), combine info.
+
+    Returns (buf (E*c, D), slot (g*k,), weight (g*k,), aux (2,)).
+    ``slot == E*c`` marks dropped assignments (scattered to a dummy row).
+    """
+    g, d = x.shape
+    e, k = cfg.n_experts, cfg.top_k
+
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    top_w, top_e = jax.lax.top_k(probs, k)                       # (g, k)
+    top_w = top_w / jnp.maximum(top_w.sum(-1, keepdims=True), 1e-9)
+
+    flat_e = top_e.reshape(-1)                                   # (g*k,)
+    flat_w = top_w.reshape(-1)
+    flat_tok = jnp.repeat(jnp.arange(g, dtype=jnp.int32), k)
+
+    # position-in-expert via stable sort by expert id
+    order = jnp.argsort(flat_e, stable=True)                     # (g*k,)
+    sorted_e = flat_e[order]
+    # index within the sorted run of each expert
+    counts = jnp.bincount(flat_e, length=e)                      # (e,)
+    starts = jnp.cumsum(counts) - counts                         # (e,)
+    pos_sorted = jnp.arange(g * k, dtype=jnp.int32) - starts[sorted_e]
+    pos = jnp.zeros_like(pos_sorted).at[order].set(pos_sorted)   # unsort
+
+    kept = pos < c
+    slot = jnp.where(kept, flat_e * c + pos, e * c)              # dummy last
+    weight = jnp.where(kept, flat_w, 0.0)
+
+    buf = jnp.zeros((e * c + 1, d), x.dtype)
+    buf = buf.at[slot].add(x[flat_tok])                          # one-hit
+    # load-balance loss (Switch): E * sum_e fraction_tokens_e * mean_prob_e
+    frac_tok = counts.astype(jnp.float32) / (g * k)
+    mean_prob = probs.mean(axis=0)
+    lb = e * jnp.sum(frac_tok * mean_prob)
+    z = jnp.mean(jax.scipy.special.logsumexp(
+        logits.astype(jnp.float32), axis=-1) ** 2)
+    return buf[:-1], slot, weight, flat_tok, jnp.stack([lb, z])
+
+
+def _combine_group(y: jax.Array, slot, weight, flat_tok, g: int):
+    """y (E*c, D) -> (g, D) weighted combine (scatter-add over tokens)."""
+    yk = jnp.concatenate([y, jnp.zeros((1, y.shape[1]), y.dtype)], axis=0)
+    gathered = yk[slot] * weight[:, None].astype(y.dtype)        # (g*k, D)
+    out = jnp.zeros((g, y.shape[1]), y.dtype).at[flat_tok].add(gathered)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# The layer
+# ---------------------------------------------------------------------------
+def apply_moe(p, x: jax.Array, cfg: ModelConfig, *,
+              group_size: Optional[int] = None):
+    """x (B, S, D) -> (y (B, S, D), aux_losses (2,) [load_balance, z]).
+
+    ``group_size`` defaults to S (one routing group per sequence), keeping
+    groups aligned with the batch sharding so dispatch scatters stay local.
+    """
+    b, s, d = x.shape
+    e = cfg.n_experts
+    dt = cdtype(cfg)
+    g = group_size or s
+    n_groups = (b * s) // g
+    c = capacity(cfg, g)
+
+    xg = x.reshape(n_groups, g, d)
+    xg = constrain(xg, "batch", None, None)
+    logits = jnp.einsum("ngd,de->nge", xg.astype(dt), p["router"].astype(dt))
+
+    route = jax.vmap(lambda xx, ll: _route_group(xx, ll, cfg, c))
+    buf, slot, weight, flat_tok, aux = route(xg, logits)
+    # buf: (n_groups, E*c, D) -> expert-major for EP
+    he = buf.reshape(n_groups, e, c, d)
+    he = constrain(he, "batch", "expert", None, None)   # all-to-all boundary
+
+    wi, wg, wo = (p["wi"].astype(dt), p["wg"].astype(dt), p["wo"].astype(dt))
+    hidden = act_fn(cfg)(jnp.einsum("necd,edf->necf", he.astype(dt), wg))
+    hidden = hidden * jnp.einsum("necd,edf->necf", he.astype(dt), wi)
+    y_exp = jnp.einsum("necf,efd->necd", hidden, wo)
+    y_exp = constrain(y_exp, "batch", "expert", None, None)
+
+    combine = jax.vmap(lambda yy, sl, w, tk: _combine_group(yy, sl, w, tk, g))
+    y = combine(y_exp.reshape(n_groups, e * c, d), slot, weight, flat_tok)
+    y = y.reshape(b, s, d)
+
+    if cfg.n_shared_experts:
+        sp = p["shared"]
+        h = act_fn(cfg)(jnp.dot(x.astype(dt), sp["wg"].astype(dt)))
+        h = h * jnp.dot(x.astype(dt), sp["wi"].astype(dt))
+        y = y + jnp.dot(h, sp["wo"].astype(dt))
+
+    return y, aux.mean(axis=0)

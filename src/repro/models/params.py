@@ -1,0 +1,102 @@
+"""Parameter-spec trees: one source of truth for shapes, sharding and init.
+
+Every model module describes its parameters as a pytree of :class:`ParamSpec`
+(shape + logical axis names + init law).  From that single tree we derive:
+
+* ``init_params``     — concrete fp32 arrays (rng folded in by tree path);
+* ``abstract_params`` — ShapeDtypeStructs for the dry-run (never allocates);
+* ``partition_specs`` — jax PartitionSpecs via the distributed rules
+  (see repro.distributed.sharding), mapping logical axes such as "embed",
+  "mlp", "heads", "vocab", "expert" onto mesh axes.
+
+Logical axis vocabulary (used by the sharding rules):
+  "layers"  — stacked scan groups (never sharded)
+  "embed"   — the d_model axis (FSDP axis in train regimes)
+  "mlp"     — feed-forward hidden
+  "heads"   — attention heads x head_dim flattened
+  "kv"      — kv heads x head_dim flattened
+  "vocab"   — vocabulary
+  "expert"  — MoE expert axis
+  None      — replicated
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]
+    init: str = "normal"          # "normal" | "zeros" | "ones" | "constant"
+    scale: float = 1.0            # stddev for normal (already fan-adjusted)
+    constant: float = 0.0
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def dense_spec(in_dim: int, out_dim: int, axes=("embed", "mlp"),
+               scale: float | None = None, stacked: int = 0) -> ParamSpec:
+    """A (in, out) matmul weight with 1/sqrt(fan_in) init."""
+    scale = in_dim ** -0.5 if scale is None else scale
+    shape: Tuple[int, ...] = (in_dim, out_dim)
+    ax: Tuple[Optional[str], ...] = tuple(axes)
+    if stacked:
+        shape = (stacked,) + shape
+        ax = ("layers",) + ax
+    return ParamSpec(shape, ax, "normal", scale)
+
+
+def is_spec(x: Any) -> bool:
+    return isinstance(x, ParamSpec)
+
+
+def _map_specs(fn, tree):
+    return jax.tree_util.tree_map(fn, tree, is_leaf=is_spec)
+
+
+def init_params(spec_tree, key: jax.Array, dtype=jnp.float32):
+    """Concrete init: rng is folded in from the flattened tree path so that
+    adding/removing parameters never perturbs unrelated weights."""
+    leaves, treedef = jax.tree_util.tree_flatten_with_path(
+        spec_tree, is_leaf=is_spec)
+
+    out = []
+    for path, spec in leaves:
+        name = jax.tree_util.keystr(path)
+        sub = jax.random.fold_in(key, hash(name) % (2 ** 31))
+        if spec.init == "zeros":
+            arr = jnp.zeros(spec.shape, dtype)
+        elif spec.init == "ones":
+            arr = jnp.ones(spec.shape, dtype)
+        elif spec.init == "constant":
+            arr = jnp.full(spec.shape, spec.constant, dtype)
+        else:
+            arr = jax.random.normal(sub, spec.shape, dtype) * spec.scale
+        out.append(arr)
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def abstract_params(spec_tree, dtype=jnp.float32):
+    return _map_specs(
+        lambda s: jax.ShapeDtypeStruct(s.shape, dtype), spec_tree)
+
+
+def logical_axes(spec_tree):
+    return _map_specs(lambda s: s.axes, spec_tree)
+
+
+def param_bytes(spec_tree, itemsize: int = 4) -> int:
+    total = 0
+    for spec in jax.tree_util.tree_leaves(spec_tree, is_leaf=is_spec):
+        n = 1
+        for s in spec.shape:
+            n *= s
+        total += n * itemsize
+    return total

@@ -1,0 +1,176 @@
+"""RWKV-6 (Finch) block: time-mix with data-dependent decay + channel-mix.
+
+Attention-free: per-head state is a (D x D) outer-product accumulator with
+*data-dependent* per-channel decay w_t (the Finch contribution), computed by
+a low-rank (lora) projection.  Decode state is O(1) in context — three
+tensors per layer: last-token shifts for time/channel mix and the WKV state
+(B, H, D, D) — which is why rwkv6 runs the long_500k cell.
+
+The block carries its own channel-mix (mlp_pattern "none" in configs).
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..distributed.sharding import constrain
+from ..kernels.rwkv6_scan.ops import rwkv6_scan, rwkv6_step_ref
+from .config import ModelConfig
+from .layers import cdtype
+from .params import ParamSpec, dense_spec
+
+LORA_W = 64     # decay-lora rank (rwkv6 uses 64 for 3B)
+
+
+def rwkv_spec(cfg: ModelConfig, stacked: int = 0) -> Dict[str, ParamSpec]:
+    d, ff = cfg.d_model, cfg.d_ff
+    h, hd = cfg.rwkv_heads, cfg.rwkv_head_dim
+
+    def p(shape, axes, init="normal", scale=0.02, constant=0.0):
+        if stacked:
+            shape = (stacked,) + shape
+            axes = ("layers",) + axes
+        return ParamSpec(shape, axes, init, scale, constant)
+
+    return {
+        # time-mix interpolation coefficients (per channel)
+        "mu_r": p((d,), ("embed",), "constant", constant=0.5),
+        "mu_k": p((d,), ("embed",), "constant", constant=0.5),
+        "mu_v": p((d,), ("embed",), "constant", constant=0.5),
+        "mu_w": p((d,), ("embed",), "constant", constant=0.5),
+        "mu_g": p((d,), ("embed",), "constant", constant=0.5),
+        "wr": dense_spec(d, d, ("embed", "heads"), stacked=stacked),
+        "wk": dense_spec(d, d, ("embed", "heads"), stacked=stacked),
+        "wv": dense_spec(d, d, ("embed", "heads"), stacked=stacked),
+        "wg": dense_spec(d, d, ("embed", "heads"), stacked=stacked),
+        "wo": dense_spec(d, d, ("heads", "embed"), stacked=stacked),
+        # data-dependent decay: w = exp(-exp(w0 + lora))
+        "w0": p((d,), ("embed",), "constant", constant=-1.0),
+        "w_lora_a": dense_spec(d, LORA_W, ("embed", None), stacked=stacked),
+        "w_lora_b": dense_spec(LORA_W, d, (None, "heads"), stacked=stacked),
+        "u_bonus": p((h, hd), (None, None), "normal", 0.02),
+        "ln_x": p((d,), ("embed",), "ones"),          # per-head groupnorm
+        # channel-mix
+        "cmu_r": p((d,), ("embed",), "constant", constant=0.5),
+        "cmu_k": p((d,), ("embed",), "constant", constant=0.5),
+        "cwr": dense_spec(d, d, ("embed", "mlp"), stacked=stacked),
+        "cwk": dense_spec(d, ff, ("embed", "mlp"), stacked=stacked),
+        "cwv": dense_spec(ff, d, ("mlp", "embed"), stacked=stacked),
+    }
+
+
+def _shift(x: jax.Array, last: jax.Array | None = None) -> jax.Array:
+    """Token shift: y_t = x_{t-1}; position 0 gets ``last`` (or zeros)."""
+    first = (jnp.zeros_like(x[:, :1]) if last is None else last[:, None])
+    return jnp.concatenate([first, x[:, :-1]], axis=1)
+
+
+def _heads(x: jax.Array, h: int, hd: int) -> jax.Array:
+    b, t, _ = x.shape
+    return x.reshape(b, t, h, hd).transpose(0, 2, 1, 3)   # (B, H, T, D)
+
+
+def _group_norm(x: jax.Array, scale: jax.Array, h: int, hd: int,
+                eps: float) -> jax.Array:
+    """Per-head LayerNorm of the WKV output (B, T, D)."""
+    b, t, _ = x.shape
+    xh = x.reshape(b, t, h, hd).astype(jnp.float32)
+    mu = xh.mean(-1, keepdims=True)
+    var = xh.var(-1, keepdims=True)
+    xn = (xh - mu) * jax.lax.rsqrt(var + eps)
+    return (xn.reshape(b, t, h * hd) * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+def _mix_inputs(p, x: jax.Array, xx: jax.Array, cfg: ModelConfig):
+    """Interpolated r/k/v/w/g inputs + projections (shared by scan/step)."""
+    dt = cdtype(cfg)
+    h, hd = cfg.rwkv_heads, cfg.rwkv_head_dim
+
+    def mix(mu):
+        return (x + xx * p[mu].astype(x.dtype)).astype(dt)
+
+    r = jnp.dot(mix("mu_r"), p["wr"].astype(dt))
+    k = jnp.dot(mix("mu_k"), p["wk"].astype(dt))
+    v = jnp.dot(mix("mu_v"), p["wv"].astype(dt))
+    g = jax.nn.silu(jnp.dot(mix("mu_g"), p["wg"].astype(dt)))
+    wl = jnp.tanh(jnp.dot(mix("mu_w"), p["w_lora_a"].astype(dt)))
+    w_log = (p["w0"].astype(jnp.float32)
+             + jnp.dot(wl, p["w_lora_b"].astype(dt)).astype(jnp.float32))
+    w = jnp.exp(-jnp.exp(w_log))                       # (…, D) in (0, 1)
+    return r, k, v, w, g
+
+
+def rwkv_time_mix(p, x: jax.Array, cfg: ModelConfig, *,
+                  state: Tuple | None = None, return_state: bool = False):
+    """x (B, S, D) -> (B, S, D).  state = (last_x (B,D), wkv (B,H,D,D))."""
+    b, s, d = x.shape
+    h, hd = cfg.rwkv_heads, cfg.rwkv_head_dim
+    dt = cdtype(cfg)
+    last_x, wkv0 = state if state is not None else (None, None)
+    xx = _shift(x, last_x) - x
+    r, k, v, w, g = _mix_inputs(p, x, xx, cfg)
+    rh, kh, vh, wh = (_heads(z, h, hd) for z in (r, k, v, w))
+    rh = constrain(rh, "batch", "heads", "seq", None)
+    y, wkv = rwkv6_scan(rh, kh, vh, wh.astype(jnp.float32),
+                        p["u_bonus"].astype(jnp.float32), state0=wkv0)
+    y = y.transpose(0, 2, 1, 3).reshape(b, s, d)
+    y = _group_norm(y, p["ln_x"], h, hd, cfg.norm_eps) * g
+    out = jnp.dot(y.astype(dt), p["wo"].astype(dt))
+    if return_state:
+        return out, (x[:, -1].astype(dt), wkv)
+    return out
+
+
+def rwkv_channel_mix(p, x: jax.Array, cfg: ModelConfig, *,
+                     last_x: jax.Array | None = None,
+                     return_state: bool = False):
+    dt = cdtype(cfg)
+    xx = _shift(x, last_x) - x
+    xr = (x + xx * p["cmu_r"].astype(x.dtype)).astype(dt)
+    xk = (x + xx * p["cmu_k"].astype(x.dtype)).astype(dt)
+    r = jax.nn.sigmoid(jnp.dot(xr, p["cwr"].astype(dt)))
+    k = jnp.square(jax.nn.relu(jnp.dot(xk, p["cwk"].astype(dt))))
+    y = r * jnp.dot(k, p["cwv"].astype(dt))
+    if return_state:
+        return y, x[:, -1].astype(dt)
+    return y
+
+
+def rwkv_block(p, x: jax.Array, cfg: ModelConfig, *,
+               state=None, return_state: bool = False):
+    """Full pre-norm RWKV block body (norms applied by the caller stack).
+
+    state = (tmix_last, wkv, cmix_last); both sub-mixes are residual.
+    """
+    if state is None:
+        t_out = rwkv_time_mix(p, x, cfg)
+        x = x + t_out
+        x = x + rwkv_channel_mix(p, x, cfg)
+        if return_state:
+            raise ValueError("pass state to get return_state")
+        return x
+    tmix_last, wkv, cmix_last = state
+    t_out, (t_last, wkv) = rwkv_time_mix(p, x, cfg, state=(tmix_last, wkv),
+                                         return_state=True)
+    x = x + t_out
+    c_out, c_last = rwkv_channel_mix(p, x, cfg, last_x=cmix_last,
+                                     return_state=True)
+    x = x + c_out
+    return x, (t_last, wkv, c_last)
+
+
+def init_rwkv_state(cfg: ModelConfig, batch: int, dtype=jnp.bfloat16):
+    d, h, hd = cfg.d_model, cfg.rwkv_heads, cfg.rwkv_head_dim
+    return (jnp.zeros((batch, d), dtype),
+            jnp.zeros((batch, h, hd, hd), jnp.float32),
+            jnp.zeros((batch, d), dtype))
+
+
+def rwkv_state_struct(cfg: ModelConfig, batch: int, dtype=jnp.bfloat16):
+    d, h, hd = cfg.d_model, cfg.rwkv_heads, cfg.rwkv_head_dim
+    return (jax.ShapeDtypeStruct((batch, d), dtype),
+            jax.ShapeDtypeStruct((batch, h, hd, hd), jnp.float32),
+            jax.ShapeDtypeStruct((batch, d), dtype))

@@ -1,0 +1,469 @@
+"""The model stack: embed → lax.scan over layer groups → norm → logits.
+
+One periodic *group* holds ``cfg.block_pattern`` block positions (e.g. jamba:
+1 attn + 7 mamba).  Parameters for each position are stacked over
+``n_groups`` and the stack is a single ``lax.scan``, so HLO size is
+O(period), not O(depth) — mistral-large's 88 layers lower as one scan of 22
+groups (essential for the 1-CPU multi-pod dry-run, and what a real TPU build
+wants anyway).
+
+Three entry points (all pure, jit/pjit-able):
+
+* :func:`forward`      — full-sequence hidden states (train / encoder);
+* :func:`train_loss`   — CE loss + MoE aux losses + metrics;
+* :func:`prefill` / :func:`decode_step` — serving with per-kind caches
+  (KV / MLA-latent / mamba-state / rwkv-state), carried as scan xs/ys.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..distributed.sharding import constrain
+from .attention import (attend_decode, attend_full, attn_spec,
+                        cache_from_prefill, init_kv_cache, kv_cache_struct)
+from .config import ModelConfig
+from .frontends import embed_audio, embed_vision, frontend_spec
+from .layers import (apply_mlp, apply_norm, cdtype, cross_entropy,
+                     embed_spec, embed_tokens, logits_from_hidden, mlp_spec,
+                     norm_spec, residual_scale)
+from .mamba import (init_mamba_state, mamba_decode, mamba_full, mamba_spec,
+                    mamba_state_struct)
+from .mla import (init_mla_cache, mla_cache_from_prefill, mla_cache_struct,
+                  mla_decode, mla_full, mla_spec)
+from .moe import apply_moe, moe_spec
+from .rwkv import (init_rwkv_state, rwkv_channel_mix, rwkv_spec,
+                   rwkv_state_struct, rwkv_time_mix)
+
+AUX_LB_COEF = 0.01      # load-balance loss weight
+AUX_Z_COEF = 0.001      # router z-loss weight
+
+_BLOCK_SPECS = {"attn": attn_spec, "mla": mla_spec, "mamba": mamba_spec,
+                "rwkv": rwkv_spec}
+
+
+# ---------------------------------------------------------------------------
+# Parameter tree
+# ---------------------------------------------------------------------------
+def _position_spec(cfg: ModelConfig, kind: str, mlp_kind: str, stacked: int):
+    out = {"norm1": norm_spec(cfg, stacked),
+           "block": _BLOCK_SPECS[kind](cfg, stacked)}
+    if mlp_kind == "dense":
+        out["norm2"] = norm_spec(cfg, stacked)
+        out["mlp"] = mlp_spec(cfg, cfg.d_ff, stacked)
+    elif mlp_kind == "moe":
+        out["norm2"] = norm_spec(cfg, stacked)
+        out["mlp"] = moe_spec(cfg, stacked)
+    elif kind == "rwkv":
+        out["norm2"] = norm_spec(cfg, stacked)   # channel-mix pre-norm
+    return out
+
+
+def model_spec(cfg: ModelConfig) -> Dict[str, Any]:
+    g = cfg.n_groups
+    spec: Dict[str, Any] = {
+        "embed": embed_spec(cfg),
+        "final_norm": norm_spec(cfg),
+        "blocks": {
+            f"pos{i}": _position_spec(cfg, kind, mlp_kind, g)
+            for i, (kind, mlp_kind) in enumerate(
+                zip(cfg.block_pattern, cfg.mlp_pattern))
+        },
+    }
+    if cfg.first_layer_dense:
+        first_kind = cfg.block_pattern[0]
+        spec["layer0"] = {
+            "norm1": norm_spec(cfg),
+            "block": _BLOCK_SPECS[first_kind](cfg, 0),
+            "norm2": norm_spec(cfg),
+            "mlp": mlp_spec(cfg, cfg.d_ff_dense or cfg.d_ff, 0),
+        }
+    fe = frontend_spec(cfg)
+    if fe:
+        spec["frontend"] = fe
+    return spec
+
+
+# ---------------------------------------------------------------------------
+# Embedding of model inputs
+# ---------------------------------------------------------------------------
+def embed_inputs(params, inputs: Dict[str, jax.Array], cfg: ModelConfig
+                 ) -> jax.Array:
+    """inputs: {"tokens": (B,S)} [+ "patches" (B,P,F) | "frames" (B,S,F)]."""
+    if cfg.frontend == "audio":
+        return embed_audio(params["frontend"], inputs["frames"], cfg)
+    x = embed_tokens(params["embed"], inputs["tokens"], cfg)
+    if cfg.frontend == "vision" and "patches" in inputs:
+        prefix = embed_vision(params["frontend"], inputs["patches"], cfg)
+        x = jnp.concatenate([prefix, x], axis=1)
+    return x
+
+
+# ---------------------------------------------------------------------------
+# One block position (shared by train / prefill / decode bodies)
+# ---------------------------------------------------------------------------
+def _apply_position(p, x, cfg: ModelConfig, kind: str, mlp_kind: str, *,
+                    mode: str = "train", cache=None, pos=None):
+    """Returns (x, aux (2,), new_cache_or_None)."""
+    rs = residual_scale(cfg)
+    aux = jnp.zeros((2,), jnp.float32)
+    new_cache = None
+
+    h = apply_norm(p["norm1"], x, cfg)
+    if kind == "attn":
+        if mode == "decode":
+            out, new_cache = attend_decode(p["block"], h, cache, pos, cfg)
+        elif mode == "prefill":
+            out, (k, v) = attend_full(p["block"], h, cfg, return_kv=True)
+            new_cache = (k, v)
+        else:
+            out = attend_full(p["block"], h, cfg)
+    elif kind == "mla":
+        if mode == "decode":
+            out, new_cache = mla_decode(p["block"], h, cache, pos, cfg)
+        elif mode == "prefill":
+            out, new_cache = mla_full(p["block"], h, cfg, return_cache=True)
+        else:
+            out = mla_full(p["block"], h, cfg)
+    elif kind == "mamba":
+        if mode == "decode":
+            out, new_cache = mamba_decode(p["block"], h, cache, cfg)
+        elif mode == "prefill":
+            out, new_cache = mamba_full(p["block"], h, cfg, return_state=True)
+        else:
+            out = mamba_full(p["block"], h, cfg)
+    elif kind == "rwkv":
+        if mode == "decode":
+            tlast, wkv, clast = cache
+            out, (tlast2, wkv2) = rwkv_time_mix(
+                p["block"], h, cfg, state=(tlast, wkv), return_state=True)
+            x = x + out * rs
+            h2 = apply_norm(p["norm2"], x, cfg)
+            out2, clast2 = rwkv_channel_mix(p["block"], h2, cfg,
+                                            last_x=clast, return_state=True)
+            x = x + out2 * rs
+            return x, aux, (tlast2, wkv2, clast2)
+        elif mode == "prefill":
+            zs = init_rwkv_state(cfg, x.shape[0], cdtype(cfg))
+            out, (tlast2, wkv2) = rwkv_time_mix(
+                p["block"], h, cfg, state=(zs[0], zs[1]), return_state=True)
+            x = x + out * rs
+            h2 = apply_norm(p["norm2"], x, cfg)
+            out2, clast2 = rwkv_channel_mix(p["block"], h2, cfg,
+                                            last_x=zs[2], return_state=True)
+            x = x + out2 * rs
+            return x, aux, (tlast2, wkv2, clast2)
+        else:
+            out = rwkv_time_mix(p["block"], h, cfg)
+            x = x + out * rs
+            h2 = apply_norm(p["norm2"], x, cfg)
+            x = x + rwkv_channel_mix(p["block"], h2, cfg) * rs
+            return x, aux, None
+    else:
+        raise ValueError(f"unknown block kind {kind}")
+
+    x = x + out * rs
+    if mlp_kind != "none":
+        h2 = apply_norm(p["norm2"], x, cfg)
+        if mlp_kind == "moe":
+            b, s, _ = h2.shape
+            gs = s if mode != "decode" else max(1, (b * s) // 16)
+            m_out, aux = apply_moe(p["mlp"], h2, cfg, group_size=gs)
+        else:
+            m_out = apply_mlp(p["mlp"], h2, cfg)
+        x = x + m_out * rs
+    x = constrain(x, "batch", "seq", None)
+    return x, aux, new_cache
+
+
+def _apply_layer0(params, x, cfg: ModelConfig, *, mode="train", cache=None,
+                  pos=None):
+    """deepseek's dense first layer (same block kind, dense MLP)."""
+    p = params["layer0"]
+    kind = cfg.block_pattern[0]
+    rs = residual_scale(cfg)
+    h = apply_norm(p["norm1"], x, cfg)
+    new_cache = None
+    if kind == "mla":
+        if mode == "decode":
+            out, new_cache = mla_decode(p["block"], h, cache, pos, cfg)
+        elif mode == "prefill":
+            out, new_cache = mla_full(p["block"], h, cfg, return_cache=True)
+        else:
+            out = mla_full(p["block"], h, cfg)
+    else:
+        if mode == "decode":
+            out, new_cache = attend_decode(p["block"], h, cache, pos, cfg)
+        elif mode == "prefill":
+            out, (k, v) = attend_full(p["block"], h, cfg, return_kv=True)
+            new_cache = (k, v)
+        else:
+            out = attend_full(p["block"], h, cfg)
+    x = x + out * rs
+    h2 = apply_norm(p["norm2"], x, cfg)
+    x = x + apply_mlp(p["mlp"], h2, cfg) * rs
+    return x, new_cache
+
+
+# ---------------------------------------------------------------------------
+# Full-sequence forward (train / encode)
+# ---------------------------------------------------------------------------
+_REMAT_POLICIES = {
+    "dots": "dots_with_no_batch_dims_saveable",
+    "full": "nothing_saveable",
+}
+
+
+def _gather_group_params(group_params, cfg: ModelConfig):
+    """Explicit FSDP unshard: constrain every weight of this scan group to
+    drop its "embed" (data-axis) sharding.  GSPMD then emits ONE all-gather
+    per weight per group step (≈ params/n_groups bytes) and a backward
+    reduce-scatter, instead of partial-sum all-reducing full activation
+    tensors at every matmul — the classic ZeRO-3 forward schedule.  The
+    gathers pipeline against the previous group's compute inside the scan.
+    """
+    from .params import logical_axes  # local: avoid import cycle at load
+
+    dt = cdtype(cfg)
+
+    def unshard(arr, ax):
+        a = ax[1:] if (ax and ax[0] == "layers") else ax
+        if "expert" in a:
+            # EP is weight-stationary: tokens all-to-all to the experts;
+            # gathering 16x expert weights per group would cost GiBs of
+            # residency for nothing (measured on jamba train_4k, §Perf)
+            return arr
+        a = tuple(None if name == "embed" else name for name in a)
+        # gather big matrices in the compute dtype: halves all-gather bytes
+        # (fp32 master -> bf16 cast happens *before* the unshard constraint)
+        if arr.ndim >= 2 and arr.dtype == jnp.float32 and cfg.dtype != "float32":
+            arr = arr.astype(dt)
+        return constrain(arr, *a)
+
+    gathered = {}
+    for i, (kind, mlp_kind) in enumerate(
+            zip(cfg.block_pattern, cfg.mlp_pattern)):
+        sub = group_params[f"pos{i}"]
+        spec = _position_spec(cfg, kind, mlp_kind, stacked=1)
+        arrs, tdef = jax.tree_util.tree_flatten(sub)
+        axes = jax.tree_util.tree_leaves(
+            logical_axes(spec), is_leaf=lambda x: isinstance(x, tuple))
+        gathered[f"pos{i}"] = jax.tree_util.tree_unflatten(
+            tdef, [unshard(a, ax) for a, ax in zip(arrs, axes)])
+    return gathered
+
+
+def _maybe_remat(fn, cfg: ModelConfig):
+    """Per-layer-group remat: only the scan carry survives between groups;
+    block internals are recomputed in backward per the policy.  This is what
+    bounds train activation memory to O(1) in depth (EXPERIMENTS §Dry-run)."""
+    if cfg.remat == "none":
+        return fn
+    policy = getattr(jax.checkpoint_policies, _REMAT_POLICIES[cfg.remat])
+    return jax.checkpoint(fn, policy=policy)
+
+
+def forward(params, inputs: Dict[str, jax.Array], cfg: ModelConfig
+            ) -> Tuple[jax.Array, jax.Array]:
+    """-> (hidden (B, S, D), aux_losses (2,))."""
+    x = embed_inputs(params, inputs, cfg)
+    x = constrain(x, "batch", "seq", None)
+    aux0 = jnp.zeros((2,), jnp.float32)
+    if cfg.first_layer_dense:
+        x, _ = _apply_layer0(params, x, cfg, mode="train")
+
+    def group(x, group_params):
+        if cfg.fsdp_gather_weights:
+            group_params = _gather_group_params(group_params, cfg)
+        aux = jnp.zeros((2,), jnp.float32)
+        for i, (kind, mlp_kind) in enumerate(
+                zip(cfg.block_pattern, cfg.mlp_pattern)):
+            x, a, _ = _apply_position(group_params[f"pos{i}"], x, cfg,
+                                      kind, mlp_kind, mode="train")
+            aux = aux + a
+        return x, aux
+
+    group = _maybe_remat(group, cfg)
+
+    def body(carry, group_params):
+        x, aux = carry
+        x, a = group(x, group_params)
+        return (x, aux + a), None
+
+    (x, aux), _ = jax.lax.scan(body, (x, aux0), params["blocks"])
+    x = apply_norm(params["final_norm"], x, cfg)
+    return x, aux
+
+
+def train_loss(params, batch: Dict[str, jax.Array], cfg: ModelConfig):
+    """batch: {"tokens"/"frames", "labels", optional "mask"} → (loss, metrics)."""
+    hidden, aux = forward(params, batch, cfg)
+    logits = logits_from_hidden(params["embed"], hidden, cfg)
+    labels = batch["labels"]
+    mask = batch.get("mask")
+    if logits.shape[1] != labels.shape[1]:        # vision prefix: no loss
+        prefix = logits.shape[1] - labels.shape[1]
+        logits = logits[:, prefix:]
+    ce = cross_entropy(logits, labels, mask)
+    loss = ce + AUX_LB_COEF * aux[0] + AUX_Z_COEF * aux[1]
+    metrics = {"ce": ce, "load_balance": aux[0], "router_z": aux[1],
+               "loss": loss}
+    return loss, metrics
+
+
+# ---------------------------------------------------------------------------
+# Caches
+# ---------------------------------------------------------------------------
+def _position_cache(cfg: ModelConfig, kind: str, batch: int, max_len: int,
+                    dtype, make):
+    if kind == "attn":
+        fns = {"init": init_kv_cache, "struct": kv_cache_struct}
+        return fns[make](cfg, batch, max_len, dtype)
+    if kind == "mla":
+        fns = {"init": init_mla_cache, "struct": mla_cache_struct}
+        return fns[make](cfg, batch, max_len, dtype)
+    if kind == "mamba":
+        fns = {"init": init_mamba_state, "struct": mamba_state_struct}
+        return fns[make](cfg, batch, dtype)
+    if kind == "rwkv":
+        fns = {"init": init_rwkv_state, "struct": rwkv_state_struct}
+        return fns[make](cfg, batch, dtype)
+    raise ValueError(kind)
+
+
+def _stack_struct(tree, n: int):
+    return jax.tree_util.tree_map(
+        lambda s: (jax.ShapeDtypeStruct((n,) + s.shape, s.dtype)
+                   if isinstance(s, jax.ShapeDtypeStruct)
+                   else jnp.broadcast_to(s, (n,) + s.shape)), tree)
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int,
+               dtype=jnp.bfloat16, make: str = "init"):
+    """Cache pytree: {"pos{i}": stacked-over-groups per-kind state}
+    [+ "layer0" for deepseek].  ``make="struct"`` gives ShapeDtypeStructs."""
+    cache: Dict[str, Any] = {}
+    for i, kind in enumerate(cfg.block_pattern):
+        per = _position_cache(cfg, kind, batch, max_len, dtype, make)
+        cache[f"pos{i}"] = _stack_struct(per, cfg.n_groups)
+    if cfg.first_layer_dense:
+        cache["layer0"] = _position_cache(cfg, cfg.block_pattern[0], batch,
+                                          max_len, dtype, make)
+    return cache
+
+
+def cache_struct(cfg: ModelConfig, batch: int, max_len: int,
+                 dtype=jnp.bfloat16):
+    return init_cache(cfg, batch, max_len, dtype, make="struct")
+
+
+#: Logical sharding axes per cache-leaf kind (mirrors _position_cache).
+_CACHE_AXES = {
+    "attn": {"k": ("batch", "kv_heads", "kv_seq", None),
+             "v": ("batch", "kv_heads", "kv_seq", None)},
+    "mla": {"c_kv": ("batch", "kv_seq", None),
+            "k_rope": ("batch", "kv_seq", None)},
+    "mamba": (("batch", None, "mlp"), ("batch", "mlp", None)),
+    "rwkv": (("batch", None), ("batch", "heads", None, None),
+             ("batch", None)),
+}
+
+
+def cache_axes(cfg: ModelConfig):
+    """Pytree of logical-axes tuples matching :func:`cache_struct` exactly
+    (stacked positions gain a leading "layers" axis)."""
+    def stacked(tree):
+        return jax.tree_util.tree_map(
+            lambda ax: ("layers",) + ax, tree,
+            is_leaf=lambda x: isinstance(x, tuple) and all(
+                isinstance(e, (str, type(None))) for e in x))
+
+    out = {}
+    for i, kind in enumerate(cfg.block_pattern):
+        out[f"pos{i}"] = stacked(_CACHE_AXES[kind])
+    if cfg.first_layer_dense:
+        out["layer0"] = _CACHE_AXES[cfg.block_pattern[0]]
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Prefill
+# ---------------------------------------------------------------------------
+def prefill(params, inputs: Dict[str, jax.Array], cfg: ModelConfig,
+            max_len: int, cache_dtype=jnp.bfloat16):
+    """Process the prompt; -> (last-token logits (B, Vp), cache at S)."""
+    if cfg.is_encoder:
+        raise ValueError(f"{cfg.name} is encoder-only: no prefill/decode")
+    x = embed_inputs(params, inputs, cfg)
+    x = constrain(x, "batch", "seq", None)
+    cache: Dict[str, Any] = {}
+    if cfg.first_layer_dense:
+        x, c0 = _apply_layer0(params, x, cfg, mode="prefill")
+        cache["layer0"] = _pad_prefill(cfg, cfg.block_pattern[0], c0,
+                                       max_len, cache_dtype)
+
+    def body(x, group_params):
+        caches = []
+        for i, (kind, mlp_kind) in enumerate(
+                zip(cfg.block_pattern, cfg.mlp_pattern)):
+            x, _, c = _apply_position(group_params[f"pos{i}"], x, cfg,
+                                      kind, mlp_kind, mode="prefill")
+            caches.append(_pad_prefill(cfg, kind, c, max_len, cache_dtype))
+        return x, tuple(caches)
+
+    x, stacked = jax.lax.scan(body, x, params["blocks"])
+    for i in range(cfg.period):
+        cache[f"pos{i}"] = stacked[i]
+    x = apply_norm(params["final_norm"], x, cfg)
+    logits = logits_from_hidden(params["embed"], x[:, -1:], cfg)[:, 0]
+    return logits, cache
+
+
+def _pad_prefill(cfg, kind, c, max_len, dtype):
+    if kind == "attn":
+        return cache_from_prefill(cfg, c[0], c[1], max_len, dtype)
+    if kind == "mla":
+        return mla_cache_from_prefill(cfg, c[0], c[1], max_len, dtype)
+    return c    # mamba / rwkv states are O(1): stored as-is
+
+
+# ---------------------------------------------------------------------------
+# Decode
+# ---------------------------------------------------------------------------
+def decode_step(params, cache, tokens: jax.Array, pos, cfg: ModelConfig):
+    """One token for every sequence.  tokens (B,) int32, pos scalar int32.
+
+    Returns (logits (B, Vp) fp32, updated cache).
+    """
+    if cfg.is_encoder:
+        raise ValueError(f"{cfg.name} is encoder-only: no decode step")
+    x = embed_tokens(params["embed"], tokens[:, None], cfg)
+    x = constrain(x, "batch", None, None)
+    if cfg.first_layer_dense:
+        x, c0 = _apply_layer0(params, x, cfg, mode="decode",
+                              cache=cache["layer0"], pos=pos)
+        new_layer0 = c0
+
+    def body(x, xs):
+        group_params, group_cache = xs
+        new_caches = []
+        for i, (kind, mlp_kind) in enumerate(
+                zip(cfg.block_pattern, cfg.mlp_pattern)):
+            x, _, c = _apply_position(
+                group_params[f"pos{i}"], x, cfg, kind, mlp_kind,
+                mode="decode", cache=group_cache[f"pos{i}"], pos=pos)
+            new_caches.append(c)
+        return x, tuple(new_caches)
+
+    scan_cache = {k: v for k, v in cache.items() if k != "layer0"}
+    x, stacked = jax.lax.scan(body, x, (params["blocks"], scan_cache))
+    new_cache = {f"pos{i}": stacked[i] for i in range(cfg.period)}
+    if cfg.first_layer_dense:
+        new_cache["layer0"] = new_layer0
+    x = apply_norm(params["final_norm"], x, cfg)
+    logits = logits_from_hidden(params["embed"], x, cfg)[:, 0]
+    return logits, new_cache

@@ -1,0 +1,52 @@
+"""Learning-rate schedules: WSD (MiniCPM), cosine, constant.
+
+The WSD (warmup-stable-decay) schedule is part of the minicpm-2b assignment:
+linear warmup → flat stable phase → exponential-ish decay over the last
+``decay_frac`` of training.  Schedules are (step: int32) -> lr fp32, pure,
+so they live inside the jitted train step.
+"""
+
+from __future__ import annotations
+
+from typing import Callable
+
+import jax.numpy as jnp
+
+
+def wsd_schedule(peak_lr: float, total_steps: int, *,
+                 warmup_steps: int = 0, decay_frac: float = 0.1,
+                 final_scale: float = 0.1) -> Callable:
+    """MiniCPM WSD: warmup → stable at peak → decay to final_scale * peak."""
+    warmup = max(1, warmup_steps or total_steps // 100)
+    decay_start = int(total_steps * (1.0 - decay_frac))
+
+    def lr(step):
+        s = step.astype(jnp.float32) if hasattr(step, "astype") else float(step)
+        w = jnp.minimum(1.0, s / warmup)
+        frac = jnp.clip((s - decay_start) / max(1, total_steps - decay_start),
+                        0.0, 1.0)
+        decay = final_scale ** frac          # exponential anneal
+        return peak_lr * w * decay
+
+    return lr
+
+
+def cosine_schedule(peak_lr: float, total_steps: int, *,
+                    warmup_steps: int = 0, final_scale: float = 0.1
+                    ) -> Callable:
+    warmup = max(1, warmup_steps or total_steps // 100)
+
+    def lr(step):
+        s = step.astype(jnp.float32) if hasattr(step, "astype") else float(step)
+        w = jnp.minimum(1.0, s / warmup)
+        t = jnp.clip((s - warmup) / max(1, total_steps - warmup), 0.0, 1.0)
+        cos = final_scale + (1 - final_scale) * 0.5 * (1 + jnp.cos(jnp.pi * t))
+        return peak_lr * w * cos
+
+    return lr
+
+
+def constant_schedule(lr_value: float) -> Callable:
+    def lr(step):
+        return jnp.asarray(lr_value, jnp.float32)
+    return lr

@@ -1,0 +1,7 @@
+"""repro.train — jit-able train/serve step factories."""
+
+from .step import TrainConfig, init_train_state, make_train_step
+from .serve import make_decode_step, make_prefill_step
+
+__all__ = ["TrainConfig", "make_train_step", "init_train_state",
+           "make_prefill_step", "make_decode_step"]

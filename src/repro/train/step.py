@@ -1,0 +1,98 @@
+"""The train step: remat + microbatch grad accumulation + AdamW.
+
+Distributed-optimization structure (DESIGN.md §5):
+
+* **remat** — activation checkpointing policy per cell ("none" | "dots" |
+  "full"); "dots" keeps matmul outputs (recompute cheap elementwise),
+  "full" recomputes everything per scan group;
+* **microbatching** — the global batch is split into ``microbatches`` equal
+  slices scanned sequentially with an fp32 (or param-dtype) gradient
+  accumulator.  Because each microbatch's backward produces *sharded* grad
+  shards, GSPMD schedules the FSDP reduce-scatters of microbatch k while
+  microbatch k+1's forward computes — compute/comm overlap without manual
+  double-buffering;
+* **AdamW** with bf16 moments (repro.optim) — the whole TrainState inherits
+  parameter sharding, so optimizer update is fully ZeRO-sharded.
+
+The returned step has signature ``step(state, batch) -> (state, metrics)``
+and is pure — the launcher jits it with in/out shardings and donation.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..models.config import ModelConfig
+from ..models.params import init_params
+from ..models.transformer import model_spec, train_loss
+from ..optim import AdamWConfig, adamw_init, adamw_update
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    peak_lr: float = 3e-4
+    total_steps: int = 1000
+    remat: str = "dots"              # "none" | "dots" | "full" — applied
+    #                                  PER LAYER GROUP inside the model scan
+    #                                  (see models.transformer._maybe_remat)
+    microbatches: int = 1
+    param_dtype: str = "float32"     # "bfloat16" for the 398B cell
+    adamw: AdamWConfig = AdamWConfig()
+
+    def apply_to(self, cfg: ModelConfig) -> ModelConfig:
+        """Model-level execution knobs (remat) live on the ModelConfig."""
+        return dataclasses.replace(cfg, remat=self.remat)
+
+
+def init_train_state(cfg: ModelConfig, tcfg: TrainConfig, key) -> Dict:
+    spec = model_spec(cfg)
+    params = init_params(spec, key, dtype=jnp.dtype(tcfg.param_dtype))
+    return {"params": params, "opt": adamw_init(params)}
+
+
+def make_train_step(cfg: ModelConfig, tcfg: TrainConfig,
+                    lr_schedule: Callable) -> Callable:
+    cfg = tcfg.apply_to(cfg)
+    loss_fn = functools.partial(train_loss, cfg=cfg)
+
+    def grads_of(params, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            lambda p: loss_fn(p, batch), has_aux=True)(params)
+        return grads, metrics
+
+    def step(state: Dict, batch: Dict[str, jax.Array]
+             ) -> Tuple[Dict, Dict[str, jax.Array]]:
+        params, opt = state["params"], state["opt"]
+        k = tcfg.microbatches
+        if k <= 1:
+            grads, metrics = grads_of(params, batch)
+        else:
+            micro = jax.tree_util.tree_map(
+                lambda x: x.reshape((k, x.shape[0] // k) + x.shape[1:]),
+                batch)
+
+            def accum(acc, mb):
+                g, m = grads_of(params, mb)
+                acc = jax.tree_util.tree_map(
+                    lambda a, gg: a + gg.astype(a.dtype), acc, g)
+                return acc, m
+
+            # accumulate in the param dtype: fp32 normally; bf16 for the
+            # 398B cell where an fp32 grad buffer alone would blow HBM
+            zeros = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, p.dtype), params)
+            grads, ms = jax.lax.scan(accum, zeros, micro)
+            grads = jax.tree_util.tree_map(lambda g: g / k, grads)
+            metrics = jax.tree_util.tree_map(lambda x: x.mean(), ms)
+
+        lr = lr_schedule(opt["step"])
+        new_params, new_opt, opt_metrics = adamw_update(
+            params, grads, opt, lr, tcfg.adamw)
+        metrics = dict(metrics, **opt_metrics, lr=lr)
+        return {"params": new_params, "opt": new_opt}, metrics
+
+    return step

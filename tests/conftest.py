@@ -1,0 +1,7 @@
+"""Test configuration.  NO XLA device-count flags here — smoke tests must
+see the real single CPU device (only launch/dryrun.py requests 512)."""
+
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

@@ -1,0 +1,140 @@
+"""Per-architecture smoke tests (assignment requirement).
+
+Each of the 10 assigned archs instantiates its family-preserving REDUCED
+config (ModelConfig.reduced(): small widths/depths/experts, same block
+structure) and runs one forward + one train step on CPU, asserting output
+shapes and the absence of NaNs.  The FULL configs are exercised only via
+the dry-run (ShapeDtypeStructs, no allocation).
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, SHAPES, cells, input_specs, skip_reason
+from repro.data import DataConfig, SyntheticLMData
+from repro.models import init_params, model_spec, train_loss
+from repro.models.transformer import decode_step, forward, prefill
+from repro.optim import adamw_init, adamw_update, constant_schedule
+from repro.train.step import TrainConfig, make_train_step
+
+ARCH_IDS = sorted(ARCHS)
+B, S = 2, 32
+
+
+def _reduced(arch):
+    cfg = ARCHS[arch].reduced()
+    # generous capacity so tiny-batch MoE routing doesn't drop tokens
+    if cfg.n_experts:
+        cfg = dataclasses.replace(cfg, capacity_factor=4.0)
+    return cfg
+
+
+def _batch(cfg, key=0):
+    data = SyntheticLMData(DataConfig(B, S, cfg.vocab, seed=key), cfg)
+    return {k: jnp.asarray(v) for k, v in data.batch_at(0).items()}
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_forward_shapes_and_finite(arch):
+    cfg = _reduced(arch)
+    params = init_params(model_spec(cfg), jax.random.PRNGKey(0))
+    batch = _batch(cfg)
+    hidden, aux = forward(params, batch, cfg)
+    exp_s = S + (cfg.n_prefix_embed if cfg.frontend == "vision" else 0)
+    assert hidden.shape == (B, exp_s, cfg.d_model)
+    assert np.isfinite(np.asarray(hidden, np.float32)).all()
+    assert np.isfinite(np.asarray(aux)).all()
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_one_train_step(arch):
+    cfg = _reduced(arch)
+    tcfg = TrainConfig(peak_lr=1e-3, remat="none", microbatches=1)
+    step = jax.jit(make_train_step(cfg, tcfg, constant_schedule(1e-3)))
+    params = init_params(model_spec(cfg), jax.random.PRNGKey(0))
+    state = {"params": params, "opt": adamw_init(params)}
+    state, metrics = step(state, _batch(cfg))
+    assert np.isfinite(float(metrics["loss"]))
+    assert float(metrics["loss"]) > 0
+    # params actually moved
+    before = jax.tree_util.tree_leaves(params)[3]
+    after = jax.tree_util.tree_leaves(state["params"])[3]
+    assert not np.allclose(np.asarray(before), np.asarray(after))
+
+
+@pytest.mark.parametrize("arch", [a for a in ARCH_IDS
+                                  if not ARCHS[a].is_encoder])
+def test_prefill_then_decode(arch):
+    cfg = _reduced(arch)
+    params = init_params(model_spec(cfg), jax.random.PRNGKey(0))
+    toks = jnp.asarray(np.random.default_rng(0).integers(0, cfg.vocab,
+                                                         (B, S)), jnp.int32)
+    inputs = {"tokens": toks}
+    if cfg.frontend == "vision":
+        inputs["patches"] = jnp.asarray(
+            np.random.default_rng(1).standard_normal(
+                (B, cfg.n_prefix_embed, 1152)), jnp.float32)
+    logits, cache = prefill(params, inputs, cfg, max_len=S + 8,
+                            cache_dtype=jnp.float32)
+    assert logits.shape == (B, cfg.vocab_padded)
+    assert np.isfinite(np.asarray(logits)).all()
+    nxt = jnp.argmax(logits, -1).astype(jnp.int32)
+    pos = S + (cfg.n_prefix_embed if cfg.frontend == "vision" else 0)
+    logits2, cache = decode_step(params, cache, nxt, jnp.int32(pos), cfg)
+    assert logits2.shape == (B, cfg.vocab_padded)
+    assert np.isfinite(np.asarray(logits2)).all()
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_remat_does_not_change_loss(arch):
+    cfg = _reduced(arch)
+    params = init_params(model_spec(cfg), jax.random.PRNGKey(0))
+    batch = _batch(cfg)
+    base, _ = train_loss(params, batch, cfg)
+    rema, _ = train_loss(params, batch,
+                         dataclasses.replace(cfg, remat="full"))
+    np.testing.assert_allclose(float(base), float(rema), rtol=2e-5)
+
+
+def test_cell_grid_counts():
+    """40 nominal cells; 31 live after the documented skips."""
+    assert len(cells(include_skipped=True)) == 40
+    live = cells()
+    assert len(live) == 31
+    # long_500k only for sub-quadratic archs
+    for arch, shape, _ in live:
+        if shape == "long_500k":
+            assert arch in ("jamba-1.5-large-398b", "rwkv6-3b")
+
+
+@pytest.mark.parametrize("arch,shape", [(a, s) for a, s, _ in cells()])
+def test_input_specs_are_abstract(arch, shape):
+    specs = input_specs(arch, shape)
+    for name, st in specs.items():
+        assert isinstance(st, jax.ShapeDtypeStruct), name
+    kind = SHAPES[shape].kind
+    if kind == "decode":
+        assert specs["tokens"].shape == (SHAPES[shape].global_batch,)
+    else:
+        key = "frames" if ARCHS[arch].frontend == "audio" else "tokens"
+        assert specs[key].shape[0] == SHAPES[shape].global_batch
+
+
+def test_param_counts_match_published():
+    published = {
+        "jamba-1.5-large-398b": 398e9,
+        "deepseek-v2-236b": 236e9,
+        "mistral-large-123b": 123e9,
+        "rwkv6-3b": 3.1e9,
+        "qwen2.5-3b": 3.1e9,
+        "minicpm-2b": 2.7e9,
+        "paligemma-3b": 2.5e9,     # language tower (vision is stubbed)
+        "stablelm-1.6b": 1.6e9,
+    }
+    for arch, target in published.items():
+        got = ARCHS[arch].param_count()
+        assert abs(got - target) / target < 0.08, (arch, got, target)

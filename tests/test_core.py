@@ -1,0 +1,145 @@
+"""Core (Tiny-OpenCL execution model) unit + hypothesis property tests."""
+
+import math
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import (EGPU_4T, EGPU_8T, EGPU_16T, HOST, PRESETS,
+                        EGPUConfig, KernelKnobs, NDRange, WorkCounts,
+                        check_vmem_budget, crop_from_groups, egpu_time,
+                        host_time, pad_to_groups, schedule)
+from repro.core.scheduler import optimal_ndrange
+
+
+# ---------------------------------------------------------------------------
+# NDRange properties
+# ---------------------------------------------------------------------------
+@given(g=st.integers(1, 10_000), l=st.integers(1, 512))
+def test_ndrange_group_coverage(g, l):
+    """Work-groups cover all work-items with less than one group of slack."""
+    ndr = NDRange((g,), (l,))
+    (ng,) = ndr.num_groups
+    assert ng * l >= g
+    assert (ng - 1) * l < g
+    assert ndr.total_work_items == g
+
+
+@settings(deadline=None, max_examples=30)
+@given(g0=st.integers(1, 500), g1=st.integers(1, 500),
+       l0=st.integers(1, 32), l1=st.integers(1, 32))
+def test_ndrange_2d_padding_roundtrip(g0, g1, l0, l1):
+    ndr = NDRange((g0, g1), (l0, l1))
+    x = jnp.arange(g0 * 3, dtype=jnp.float32).reshape(g0, 3)
+    padded = pad_to_groups(x, ndr, axis=0)
+    assert padded.shape[0] == ndr.padded_size[0]
+    np.testing.assert_array_equal(crop_from_groups(padded, ndr, axis=0), x)
+
+
+@given(items=st.integers(1, 100_000),
+       cus=st.integers(1, 4), threads=st.sampled_from([1, 2, 4, 8, 16]),
+       warps=st.integers(1, 8))
+def test_scheduler_invariants(items, cus, threads, warps):
+    """Paper §V-B: every work-item lands on a slot; occupancy in (0, 1];
+    iterations = ceil(items / total slots)."""
+    cfg = EGPUConfig(compute_units=cus, threads_per_cu=threads,
+                     warps_per_cu=warps)
+    ndr = NDRange((items,), (threads,))
+    s = schedule(ndr, cfg)
+    assert s.iterations == math.ceil(items / cfg.total_threads)
+    assert 0.0 < s.occupancy <= 1.0
+    # scheduling cost is monotone in iterations (the paper's linear model)
+    s2 = schedule(NDRange((items + cfg.total_threads,), (threads,)), cfg)
+    assert s2.scheduling_cycles >= s.scheduling_cycles
+
+
+def test_optimal_ndrange_single_iteration():
+    """§VIII-B trick: work-items == hardware threads → 1 iteration, so the
+    scheduling overhead is the constant ~25 us the paper reports."""
+    for cfg in (EGPU_4T, EGPU_8T, EGPU_16T):
+        ndr = optimal_ndrange(1_000_000, cfg)
+        s = schedule(ndr, cfg)
+        assert s.iterations == 1
+        assert s.occupancy == 1.0
+
+
+# ---------------------------------------------------------------------------
+# Config validation / presets
+# ---------------------------------------------------------------------------
+def test_presets_match_paper_table_iii():
+    assert EGPU_4T.parallel_lanes == 4
+    assert EGPU_8T.parallel_lanes == 8
+    assert EGPU_16T.parallel_lanes == 16
+    for cfg in (EGPU_4T, EGPU_8T, EGPU_16T):
+        assert cfg.compute_units == 2
+        assert cfg.warps_per_cu == 4
+        assert cfg.icache_bytes_per_cu == 2048
+        assert cfg.dcache_bytes == 16 * 1024
+        assert cfg.dcache_line_bytes == 4 * cfg.threads_per_cu
+    assert (EGPU_4T.dcache_banks, EGPU_8T.dcache_banks,
+            EGPU_16T.dcache_banks) == (2, 4, 8)
+
+
+def test_config_validation_rejects_bad():
+    with pytest.raises(ValueError):
+        EGPUConfig(dcache_bytes=1000).validate()          # not a power of 2
+    with pytest.raises(ValueError):
+        EGPUConfig(compute_units=0).validate()
+    with pytest.raises(ValueError):
+        EGPUConfig(dcache_line_bytes=6).validate()
+
+
+def test_vmem_budget_check():
+    knobs = KernelKnobs(vmem_budget_bytes=1 << 20, pipeline_depth=2)
+    check_vmem_budget(knobs, 1 << 18)                     # fits
+    with pytest.raises(ValueError):
+        check_vmem_budget(knobs, 1 << 20)                 # 2x depth blows it
+
+
+@given(threads=st.sampled_from([1, 2, 4, 8, 16]))
+def test_knob_projection_monotone(threads):
+    """More e-GPU threads → wider lane tiles; more warps → deeper pipeline."""
+    base = EGPUConfig(threads_per_cu=threads).tpu_knobs()
+    wider = EGPUConfig(threads_per_cu=threads * 2).tpu_knobs()
+    assert wider.lane_tile >= base.lane_tile
+    deeper = EGPUConfig(warps_per_cu=8).tpu_knobs()
+    assert deeper.pipeline_depth >= EGPUConfig(warps_per_cu=2).tpu_knobs().pipeline_depth
+
+
+# ---------------------------------------------------------------------------
+# Machine model structure
+# ---------------------------------------------------------------------------
+def _counts(ops=1e6, dc=1e5, host=1e4, ws=1e3, barriers=0, div=0.0):
+    return WorkCounts(ops=ops, dcache_bytes=dc, host_bytes=host,
+                      working_set=ws, barriers=barriers, divergence=div)
+
+
+def test_more_threads_never_slower():
+    ndr = optimal_ndrange(10_000, EGPU_4T)
+    c = _counts()
+    times = [egpu_time(cfg, c, optimal_ndrange(10_000, cfg)).total_s
+             for cfg in (EGPU_4T, EGPU_8T, EGPU_16T)]
+    assert times[0] >= times[1] >= times[2]
+
+
+def test_divergence_and_barriers_cost():
+    ndr = optimal_ndrange(10_000, EGPU_16T)
+    base = egpu_time(EGPU_16T, _counts(), ndr).total_s
+    div = egpu_time(EGPU_16T, _counts(div=1.0), ndr).total_s
+    bar = egpu_time(EGPU_16T, _counts(barriers=100), ndr).total_s
+    assert div > base and bar > base
+
+
+def test_capacity_inflation_when_ws_exceeds_dcache():
+    ndr = optimal_ndrange(10_000, EGPU_16T)
+    small = egpu_time(EGPU_16T, _counts(ws=1e3), ndr)
+    big = egpu_time(EGPU_16T, _counts(ws=1e6), ndr)
+    assert big.transfer > small.transfer * 2
+
+
+def test_host_has_no_offload_overheads():
+    t = host_time(_counts())
+    assert t.startup == t.scheduling == t.transfer == 0.0

@@ -1,0 +1,172 @@
+"""Sharding-rule, elastic-reshard and hlo-cost analyzer tests.
+
+These run on the single CPU device (rules resolve against small meshes
+via jax.make_mesh with 1 device, or pure spec logic with mesh=None).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.distributed.elastic import replicate, reshard_arrays
+from repro.distributed.sharding import (SERVE_RULES, TRAIN_FSDP_RULES,
+                                        TRAIN_RULES, spec_for,
+                                        train_rules_for)
+from repro.launch.hlo_cost import HloModuleCost, analyze_hlo
+from repro.launch.mesh import make_host_mesh
+
+
+class FakeMesh:
+    """Duck-typed mesh for spec logic tests (axis sizes only)."""
+
+    def __init__(self, **axes):
+        self.axis_names = tuple(axes)
+        self._shape = tuple(axes.values())
+
+    @property
+    def devices(self):
+        import numpy as _np
+        return _np.empty(self._shape, object)
+
+
+POD = FakeMesh(data=16, model=16)
+MULTI = FakeMesh(pod=2, data=16, model=16)
+
+
+# ---------------------------------------------------------------------------
+# spec_for
+# ---------------------------------------------------------------------------
+def test_basic_2d_weight_spec():
+    s = spec_for(("embed", "mlp"), TRAIN_RULES, POD, (8192, 28672))
+    assert s == P("data", "model")
+
+
+def test_divisibility_fallback_replicates():
+    # 36 heads do not divide 16 → replicated head dim
+    s = spec_for(("batch", "kv_heads", None, None), TRAIN_RULES, POD,
+                 (256, 36, 4096, 64))
+    assert s == P(("pod", "data") if "pod" in POD.axis_names else "data")
+
+
+def test_progressive_fallback_drops_trailing_axes():
+    # batch 256 over (data, model, pod)=512 → drop pod, keep 256
+    s = spec_for(("batch",), TRAIN_FSDP_RULES, MULTI, (256,))
+    assert s == P(("data", "model"))
+    # batch 128 → can't do 256 → drops to (data,)=16... 128 % 32 == 0
+    s2 = spec_for(("batch",), TRAIN_FSDP_RULES, MULTI, (128,))
+    assert s2 == P(("data",))
+
+
+def test_axis_dedup_within_spec():
+    # batch takes (data, model); vocab ("model") must not reuse "model"
+    s = spec_for(("batch", "vocab"), TRAIN_FSDP_RULES, POD, (256, 102400))
+    assert s == P(("data", "model"))
+
+
+def test_pod_axis_pruned_on_single_pod_mesh():
+    s = spec_for(("batch", None), TRAIN_RULES, POD, (256, 4096))
+    assert s == P("data")
+
+
+def test_rules_selector():
+    assert train_rules_for(int(1e9)) is TRAIN_FSDP_RULES
+    assert train_rules_for(int(1e11)) is TRAIN_RULES
+
+
+def test_serve_rules_shard_kv_seq():
+    s = spec_for(("batch", None, "kv_seq", None), SERVE_RULES, POD,
+                 (128, 8, 32768, 128))
+    assert s == P("data", None, "model")
+
+
+# ---------------------------------------------------------------------------
+# Elastic resharding (1-device → 1-device is the degenerate exact case)
+# ---------------------------------------------------------------------------
+def test_reshard_roundtrip():
+    mesh = make_host_mesh()
+    tree = {"w": jnp.arange(16.0).reshape(4, 4)}
+    sh = {"w": NamedSharding(mesh, P("data", None))}
+    out = reshard_arrays(tree, sh)
+    np.testing.assert_array_equal(out["w"], tree["w"])
+    rep = replicate(tree, mesh)
+    np.testing.assert_array_equal(rep["w"], tree["w"])
+
+
+# ---------------------------------------------------------------------------
+# HLO cost analyzer (the dry-run profiler)
+# ---------------------------------------------------------------------------
+def test_scan_flops_multiplied_by_trip_count():
+    def one(x, w):
+        return jnp.dot(x, w)
+
+    def scanned(x, ws):
+        def body(c, w):
+            return jnp.dot(c, w), None
+        y, _ = jax.lax.scan(body, x, ws)
+        return y
+
+    x = jax.ShapeDtypeStruct((256, 256), jnp.float32)
+    w1 = jax.ShapeDtypeStruct((256, 256), jnp.float32)
+    wN = jax.ShapeDtypeStruct((7, 256, 256), jnp.float32)
+    f1 = analyze_hlo(jax.jit(one).lower(x, w1).compile().as_text())
+    fN = analyze_hlo(jax.jit(scanned).lower(x, wN).compile().as_text())
+    assert fN["flops"] / f1["flops"] == pytest.approx(7.0, rel=0.01)
+
+
+def test_dot_flops_exact():
+    def f(a, b):
+        return jnp.dot(a, b)
+    a = jax.ShapeDtypeStruct((64, 128), jnp.float32)
+    b = jax.ShapeDtypeStruct((128, 32), jnp.float32)
+    got = analyze_hlo(jax.jit(f).lower(a, b).compile().as_text())["flops"]
+    assert got == pytest.approx(2 * 64 * 128 * 32, rel=0.05)
+
+
+def test_dus_not_counted_as_full_buffer():
+    """A scan DUS-accumulating into a big stack must cost slice bytes."""
+    def f(xs):
+        buf = jnp.zeros((64, 128, 128), jnp.float32)
+
+        def body(b, i):
+            return jax.lax.dynamic_update_slice(
+                b, xs[i][None], (i, 0, 0)), None
+        buf, _ = jax.lax.scan(body, buf, jnp.arange(64))
+        return buf
+
+    xs = jax.ShapeDtypeStruct((64, 128, 128), jnp.float32)
+    got = analyze_hlo(jax.jit(f).lower(xs).compile().as_text())
+    full_buffer = 64 * 128 * 128 * 4
+    # 64 iterations x O(slice) — far below 64 x full buffer
+    assert got["bytes_accessed"] < 10 * full_buffer
+
+
+def test_nested_scan_multiplies():
+    def f(x, ws):
+        def outer(c, w):
+            def inner(ci, _):
+                return jnp.tanh(ci @ w), None
+            ci, _ = jax.lax.scan(inner, c, jnp.arange(3))
+            return ci, None
+        y, _ = jax.lax.scan(outer, x, ws)
+        return y
+
+    x = jax.ShapeDtypeStruct((128, 128), jnp.float32)
+    ws = jax.ShapeDtypeStruct((5, 128, 128), jnp.float32)
+    got = analyze_hlo(jax.jit(f).lower(x, ws).compile().as_text())
+    # 15 matmuls total
+    assert got["flops"] >= 15 * 2 * 128**3 * 0.95
+    assert got["transcendentals"] >= 15 * 128 * 128 * 0.95
+
+
+def test_analyzer_parses_all_dryrun_artifacts():
+    import glob
+    import json
+    files = glob.glob("artifacts/dryrun/*.json")
+    if not files:
+        pytest.skip("no dry-run artifacts present")
+    for f in files[:10]:
+        rec = json.load(open(f))
+        assert rec["cost"]["flops"] > 0
+        assert rec["cost"]["unknown_trip_counts"] == 0, f

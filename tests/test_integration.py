@@ -1,0 +1,135 @@
+"""Integration tests: TinyBio end-to-end, train loop, failure/restart."""
+
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.apps.tinybio import (TINYBIO_WORKLOAD, run_tinybio, synth_signal,
+                                tinybio_stages)
+from repro.configs import ARCHS
+from repro.core import APU, EGPU_4T, EGPU_16T
+from repro.train.step import TrainConfig
+from repro.launch.train import train_loop
+
+
+# ---------------------------------------------------------------------------
+# TinyBio end-to-end on the APU
+# ---------------------------------------------------------------------------
+def test_tinybio_pipeline_functional():
+    decisions, report = run_tinybio(EGPU_16T)
+    assert decisions.shape == (TINYBIO_WORKLOAD["n_windows"],)
+    assert np.isfinite(np.asarray(decisions)).all()
+    # the modeled comparison carries all four stages
+    assert len(report.stages) == 4
+    assert report.overall_speedup > 3.0
+    assert report.overall_energy_reduction > 1.4
+
+
+def test_tinybio_speedup_grows_with_config():
+    _, r4 = run_tinybio(EGPU_4T)
+    _, r16 = run_tinybio(EGPU_16T)
+    assert r16.overall_speedup > r4.overall_speedup
+
+
+def test_tinybio_results_identical_across_configs():
+    """Functional outputs must not depend on the hardware config."""
+    d4, _ = run_tinybio(EGPU_4T)
+    d16, _ = run_tinybio(EGPU_16T)
+    np.testing.assert_allclose(np.asarray(d4), np.asarray(d16),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_synth_signal_has_breathing_peaks():
+    from repro.kernels.delineate.ops import delineate
+    from repro.kernels.fir.ops import fir
+    sig = jnp.asarray(synth_signal(4096))
+    h = jnp.ones(16) / 16.0
+    flt = fir(sig, h)
+    # thresholded delineation: only real breathing peaks (amplitude ~1)
+    flags = np.asarray(delineate(flt, 0.3))
+    # ~0.25 Hz breathing (+0.08 Hz drift) at 32 Hz → ~30-45 crests in
+    # 128 s; residual noise can split a flat crest into 2 local maxima
+    n_peaks = (flags > 0).sum()
+    assert 20 <= n_peaks <= 100, n_peaks
+
+
+# ---------------------------------------------------------------------------
+# Train loop (reduced config) — loss must actually decrease
+# ---------------------------------------------------------------------------
+def test_train_loss_decreases():
+    cfg = ARCHS["stablelm-1.6b"].reduced()
+    tcfg = TrainConfig(peak_lr=3e-3, total_steps=60, remat="none")
+    _, losses = train_loop(cfg, tcfg, steps=60, global_batch=16, seq_len=64,
+                           seed=0)
+    first = np.mean(losses[:5])
+    last = np.mean(losses[-5:])
+    assert last < first - 0.5, (first, last)
+
+
+def test_microbatched_grads_match_full_batch():
+    import dataclasses
+
+    from repro.data import DataConfig, SyntheticLMData
+    from repro.models import init_params, model_spec
+    from repro.optim import adamw_init, constant_schedule
+    from repro.train.step import make_train_step
+
+    cfg = ARCHS["qwen2.5-3b"].reduced()
+    params = init_params(model_spec(cfg), jax.random.PRNGKey(0))
+    state = {"params": params, "opt": adamw_init(params)}
+    data = SyntheticLMData(DataConfig(8, 32, cfg.vocab, seed=0), cfg)
+    batch = {k: jnp.asarray(v) for k, v in data.batch_at(0).items()}
+
+    s1 = make_train_step(cfg, TrainConfig(microbatches=1, remat="none"),
+                         constant_schedule(1e-3))
+    s4 = make_train_step(cfg, TrainConfig(microbatches=4, remat="none"),
+                         constant_schedule(1e-3))
+    n1, m1 = s1(jax.tree_util.tree_map(jnp.copy, state), batch)
+    n4, m4 = s4(jax.tree_util.tree_map(jnp.copy, state), batch)
+    # same data, same params → same (averaged) grad norm and updated params
+    assert float(m1["grad_norm"]) == pytest.approx(float(m4["grad_norm"]),
+                                                   rel=1e-3)
+    # Adam's rsqrt(v)+eps amplifies fp-reordering noise (~1e-7 on grads)
+    # to ~1e-3 relative on near-zero params — compare accordingly
+    w1 = jax.tree_util.tree_leaves(n1["params"])[5]
+    w4 = jax.tree_util.tree_leaves(n4["params"])[5]
+    np.testing.assert_allclose(np.asarray(w1), np.asarray(w4),
+                               rtol=1e-2, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# Fault tolerance: kill at step k, restart, converge identically
+# ---------------------------------------------------------------------------
+def test_checkpoint_restart_continuity(tmp_path):
+    cfg = ARCHS["stablelm-1.6b"].reduced()
+    tcfg = TrainConfig(peak_lr=1e-3, total_steps=30, remat="none")
+    kw = dict(steps=24, global_batch=4, seq_len=32, seed=1,
+              ckpt_dir=str(tmp_path / "ck"), ckpt_every=8)
+
+    # uninterrupted run
+    _, gold = train_loop(cfg, tcfg, steps=24, global_batch=4, seq_len=32,
+                         seed=1)
+
+    # interrupted at 16 (after the step-16 checkpoint), then resumed
+    with pytest.raises(SystemExit):
+        train_loop(cfg, tcfg, simulate_failure=16, **kw)
+    _, resumed = train_loop(cfg, tcfg, **kw)
+
+    # the resumed tail reproduces the uninterrupted tail (deterministic
+    # data replay + checkpointed state)
+    np.testing.assert_allclose(resumed[-4:], gold[-4:], rtol=5e-3, atol=5e-3)
+
+
+def test_trainer_cli_smoke():
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.launch.train", "--arch", "minicpm-2b",
+         "--smoke", "--steps", "3", "--batch", "2", "--seq", "32"],
+        capture_output=True, text=True, timeout=600,
+        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin:/usr/local/bin"},
+        cwd=".")
+    assert out.returncode == 0, out.stderr[-2000:]
+    assert "done" in out.stdout

@@ -1,0 +1,194 @@
+"""Substrate tests: optimizer, schedules, data, checkpoint, compression."""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.checkpoint import (CheckpointManager, load_checkpoint,
+                              save_checkpoint)
+from repro.data import DataConfig, SyntheticLMData
+from repro.distributed.compression import (compress_int8, decompress_int8,
+                                           init_error_state)
+from repro.optim import (AdamWConfig, adamw_init, adamw_update,
+                         cosine_schedule, constant_schedule, wsd_schedule)
+
+
+# ---------------------------------------------------------------------------
+# AdamW
+# ---------------------------------------------------------------------------
+def _run_quadratic(moment_dtype, steps=150):
+    params = {"w": jnp.asarray([3.0, -2.0, 1.0])}
+    state = adamw_init(params)
+    cfg = AdamWConfig(weight_decay=0.0, moment_dtype=moment_dtype)
+    loss = lambda p: jnp.sum(p["w"] ** 2)
+    for _ in range(steps):
+        g = jax.grad(loss)(params)
+        params, state, _ = adamw_update(params, g, state, 0.05, cfg)
+    return float(loss(params))
+
+
+def test_adamw_converges():
+    assert _run_quadratic(jnp.bfloat16) < 1e-3
+
+
+def test_bf16_moments_match_fp32_convergence():
+    """The memory-saving bf16 moments must not change convergence class."""
+    l_bf16 = _run_quadratic(jnp.bfloat16)
+    l_f32 = _run_quadratic(jnp.float32)
+    assert l_bf16 < 10 * max(l_f32, 1e-9) + 1e-6
+
+
+def test_grad_clipping_bounds_update():
+    params = {"w": jnp.asarray([0.0])}
+    state = adamw_init(params)
+    cfg = AdamWConfig(clip_norm=1.0, weight_decay=0.0)
+    g = {"w": jnp.asarray([1e6])}
+    _, _, metrics = adamw_update(params, g, state, 1e-3, cfg)
+    assert float(metrics["clip_scale"]) < 1e-5
+    assert float(metrics["grad_norm"]) == pytest.approx(1e6, rel=1e-3)
+
+
+def test_weight_decay_only_on_matrices():
+    params = {"w": jnp.ones((4, 4)), "b": jnp.ones((4,))}
+    state = adamw_init(params)
+    g = {"w": jnp.zeros((4, 4)), "b": jnp.zeros((4,))}
+    new, _, _ = adamw_update(params, g, state, 0.1,
+                             AdamWConfig(weight_decay=0.1))
+    assert float(new["w"][0, 0]) < 1.0       # decayed
+    assert float(new["b"][0]) == pytest.approx(1.0)  # not decayed
+
+
+# ---------------------------------------------------------------------------
+# Schedules
+# ---------------------------------------------------------------------------
+def test_wsd_schedule_shape():
+    sched = wsd_schedule(1.0, 1000, warmup_steps=100, decay_frac=0.2)
+    assert float(sched(jnp.int32(0))) == 0.0
+    assert float(sched(jnp.int32(100))) == pytest.approx(1.0)
+    assert float(sched(jnp.int32(500))) == pytest.approx(1.0)   # stable
+    assert float(sched(jnp.int32(999))) < 0.15                  # decayed
+    # monotone decay in the last phase
+    tail = [float(sched(jnp.int32(s))) for s in range(800, 1000, 25)]
+    assert all(a >= b for a, b in zip(tail, tail[1:]))
+
+
+def test_cosine_schedule_endpoints():
+    sched = cosine_schedule(2.0, 100, warmup_steps=10, final_scale=0.1)
+    assert float(sched(jnp.int32(10))) == pytest.approx(2.0)
+    assert float(sched(jnp.int32(100))) == pytest.approx(0.2, rel=1e-2)
+
+
+# ---------------------------------------------------------------------------
+# Data pipeline
+# ---------------------------------------------------------------------------
+def test_data_exact_replay():
+    d = SyntheticLMData(DataConfig(4, 64, 101, seed=7))
+    a, b = d.batch_at(13), d.batch_at(13)
+    np.testing.assert_array_equal(a["tokens"], b["tokens"])
+    c = d.batch_at(14)
+    assert not np.array_equal(a["tokens"], c["tokens"])
+
+
+def test_data_labels_are_shifted_tokens():
+    d = SyntheticLMData(DataConfig(2, 32, 101, seed=0))
+    b = d.batch_at(0)
+    # labels[t] is the next token of tokens[t] in the same stream
+    assert b["tokens"].shape == b["labels"].shape == (2, 32)
+    np.testing.assert_array_equal(b["tokens"][:, 1:], b["labels"][:, :-1])
+
+
+def test_data_is_learnable_structure():
+    """75 % of transitions are the deterministic successor — a model can
+    beat the uniform baseline (this is what examples/train_lm.py exploits)."""
+    d = SyntheticLMData(DataConfig(8, 512, 64, seed=3))
+    b = d.batch_at(0)
+    toks, labels = b["tokens"], b["labels"]
+    # the successor function is per-sequence (keyed), so measure the
+    # majority-successor agreement within each row: with 75 % deterministic
+    # transitions the dominant next-token share must be well above uniform
+    agree = []
+    for row_t, row_l in zip(toks, labels):
+        pair_counts = {}
+        for t, l in zip(row_t, row_l):
+            pair_counts.setdefault(int(t), []).append(int(l))
+        agree += [np.bincount(v).max() / len(v)
+                  for v in pair_counts.values() if len(v) >= 4]
+    assert np.mean(agree) > 0.5, np.mean(agree)
+
+
+# ---------------------------------------------------------------------------
+# Checkpointing
+# ---------------------------------------------------------------------------
+def test_checkpoint_roundtrip(tmp_path):
+    tree = {"a": jnp.arange(10), "n": {"w": jnp.ones((3, 4)) * 2.5}}
+    save_checkpoint(str(tmp_path / "ck"), tree, step=5, meta={"x": 1})
+    out, man = load_checkpoint(str(tmp_path / "ck"), like=tree)
+    assert man["step"] == 5 and man["meta"]["x"] == 1
+    np.testing.assert_array_equal(out["a"], tree["a"])
+    np.testing.assert_array_equal(out["n"]["w"], tree["n"]["w"])
+
+
+def test_checkpoint_atomic_overwrite(tmp_path):
+    tree = {"a": jnp.zeros(4)}
+    p = str(tmp_path / "ck")
+    save_checkpoint(p, tree, step=1)
+    save_checkpoint(p, {"a": jnp.ones(4)}, step=2)
+    out, man = load_checkpoint(p, like=tree)
+    assert man["step"] == 2
+    np.testing.assert_array_equal(out["a"], np.ones(4))
+    assert not os.path.exists(p + ".tmp")
+
+
+def test_manager_rotation_and_latest(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=2)
+    tree = {"a": jnp.arange(3)}
+    for s in (10, 20, 30, 40):
+        mgr.save_async(tree, s)
+    mgr.wait()
+    assert mgr.all_steps() == [30, 40]
+    assert mgr.latest_step() == 40
+    out, man = mgr.restore_latest(like=tree)
+    assert man["step"] == 40
+
+
+# ---------------------------------------------------------------------------
+# Gradient compression
+# ---------------------------------------------------------------------------
+@settings(deadline=None, max_examples=25)
+@given(scale=st.floats(1e-3, 1e3))
+def test_int8_codec_error_bound(scale):
+    g = jnp.asarray(np.random.default_rng(0).standard_normal(128) * scale,
+                    jnp.float32)
+    q, s, err = compress_int8(g)
+    rec = decompress_int8(q, s)
+    # per-element error bounded by half a quantization step
+    assert float(jnp.max(jnp.abs(rec + err - g))) < 1e-5
+    assert float(jnp.max(jnp.abs(rec - g))) <= float(s) * 0.5 + 1e-6
+
+
+def test_error_feedback_telescopes():
+    """Sum of decompressed grads + final residual == sum of true grads."""
+    rng = np.random.default_rng(1)
+    total_true = np.zeros(32, np.float32)
+    total_sent = np.zeros(32, np.float32)
+    err = jnp.zeros(32)
+    for _ in range(50):
+        g = jnp.asarray(rng.standard_normal(32).astype(np.float32))
+        q, s, err = compress_int8(g, err)
+        total_true += np.asarray(g)
+        total_sent += np.asarray(decompress_int8(q, s))
+    resid = np.asarray(err)
+    np.testing.assert_allclose(total_sent + resid, total_true,
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_compression_wire_bytes_4x():
+    g = jnp.zeros(1024, jnp.float32)
+    q, s, _ = compress_int8(g)
+    assert q.dtype == jnp.int8
+    assert q.nbytes * 4 == g.nbytes
