@@ -3,15 +3,67 @@
 Runs the real 4-stage pipeline (FIR → delineation → FFT features → SVM) on
 the TinyCL runtime for each e-GPU config; the modeled comparison reproduces
 the paper's Fig-4 bands (pinned by tests/test_paper_validation.py).
+
+Since ISSUE 1 the pipeline dispatches through a fused CommandGraph by
+default; this bench runs eager and graph side by side (both warmed up, so
+jit compilation is amortized out of both paths), checks the outputs are
+numerically identical, and reports the wall clock of each per pipeline run
+plus the fused (dispatch-once-per-chain) modeled speed-up.  On CPU the
+walls sit close together — interpret-mode Pallas compute dominates both
+paths; the per-kernel dispatch win itself is isolated by
+``bench_dispatch.py``.
 """
 
-from repro.apps.tinybio import run_tinybio
-from repro.core import EGPU_4T, EGPU_8T, EGPU_16T
+import time
+
+import numpy as np
+
+from repro.apps.tinybio import tinybio_stages
+from repro.core import APU, EGPU_4T, EGPU_8T, EGPU_16T, CommandQueue
 
 PAPER = {  # (4T, 16T) anchors from the paper
     "fir": (3.6, 15.1), "delineate_keep": (3.1, 13.1),
     "fft_features": (3.3, 14.0), "app": (3.4, 14.3),
 }
+REPS = 5
+TRIALS = 3         # best-of (min): robust to scheduler noise on shared hosts
+
+
+def _best_of(once):
+    once()                               # warm up (compile / trace caches)
+    best = float("inf")
+    for _ in range(TRIALS):
+        t0 = time.perf_counter()
+        for _ in range(REPS):
+            out = once()
+        best = min(best, (time.perf_counter() - t0) / REPS)
+    return out, best
+
+
+def _wall_eager(apu, stages, inputs):
+    # ONE queue across reps: its jit cache keeps the non-pre-jitted stages
+    # (delineate_keep, fft_features) warm, so reps measure dispatch, not
+    # retracing; finish() only drains events new since the previous rep.
+    q = CommandQueue(apu.egpu_ctx, profile=False)
+
+    def once():
+        bufs, _ = apu.wire_pipeline(q, stages, inputs)
+        q.finish()
+        return bufs
+
+    return _best_of(once)
+
+
+def _wall_graph(apu, stages, inputs):
+    graph = apu.capture_pipeline(stages, inputs)
+
+    def once():
+        outs = graph.launch(queue_events=False)
+        for o in outs:
+            o.data.block_until_ready()
+        return outs
+
+    return _best_of(once)
 
 
 def run():
@@ -20,13 +72,32 @@ def run():
     print("=" * 76)
     rows = []
     for cfg in (EGPU_4T, EGPU_8T, EGPU_16T):
-        decisions, rep = run_tinybio(cfg)
+        # ONE APU + stage set per config: the report, the eager timing, and
+        # the graph timing share kernels and jit caches instead of tracing
+        # the 4-stage chain three separate times.
+        apu = APU(cfg)
+        stages, inputs = tinybio_stages(cfg)
+        (dec_buf,), rep = apu.offload(stages, inputs, mode="graph")
+        decisions = dec_buf.data
+        (eager_out,), wall_eager = _wall_eager(apu, stages, inputs)
+        (graph_out,), wall_graph = _wall_graph(apu, stages, inputs)
+        np.testing.assert_allclose(np.asarray(graph_out.data),
+                                   np.asarray(eager_out.data), atol=1e-5)
+        np.testing.assert_allclose(np.asarray(graph_out.data),
+                                   np.asarray(decisions), atol=1e-5)
         per = {s.name: (s.speedup, s.energy_reduction) for s in rep.stages}
         per["app"] = (rep.overall_speedup, rep.overall_energy_reduction)
-        rows.append({"config": cfg.name, **{k: v[0] for k, v in per.items()}})
+        rows.append({"config": cfg.name,
+                     **{k: v[0] for k, v in per.items()},
+                     "fused_speedup": rep.fused_speedup,
+                     "wall_eager_s": wall_eager,
+                     "wall_graph_s": wall_graph})
         parts = " | ".join(f"{k.split('_')[0]} {v[0]:5.2f}x/E{v[1]:4.2f}"
                            for k, v in per.items())
         print(f"{cfg.name:10s} {parts}")
+        print(f"{'':10s} fused-chain {rep.fused_speedup:5.2f}x | warm "
+              f"pipeline wall: eager {wall_eager*1e3:7.1f} ms vs graph "
+              f"{wall_graph*1e3:7.1f} ms (outputs identical)")
     print("\npaper bands:  fir 3.6–15.1x | delineation 3.1–13.1x | "
           "fft 3.3–14.0x | app 3.4–14.3x | energy 1.7–3.1x")
     return rows

@@ -108,9 +108,16 @@ def tinybio_stages(config: EGPUConfig = EGPU_16T, seed: int = 0):
     return stages, inputs
 
 
-def run_tinybio(config: EGPUConfig = EGPU_16T, seed: int = 0
-                ) -> Tuple[jax.Array, "object"]:
-    """Run the full pipeline on an APU; returns (decisions, report)."""
+def run_tinybio(config: EGPUConfig = EGPU_16T, seed: int = 0,
+                mode: str = "graph") -> Tuple[jax.Array, "object"]:
+    """Run the full pipeline on an APU; returns (decisions, report).
+
+    ``mode="graph"`` (default) captures all four stages into one TinyCL
+    :class:`~repro.core.runtime.CommandGraph` and dispatches them as a
+    single fused XLA computation (per-stage machine-model accounting is
+    taken from the captured schedule); ``mode="eager"`` dispatches each
+    stage as its own kernel launch.
+    """
     apu = APU(config)
-    outs, report = apu.offload(*tinybio_stages(config, seed))
+    outs, report = apu.offload(*tinybio_stages(config, seed), mode=mode)
     return outs[0].data, report

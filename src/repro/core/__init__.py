@@ -6,7 +6,8 @@ Public API:
   :class:`KernelKnobs` (TPU projection)
 * execution model: :class:`NDRange`, :func:`schedule`, :func:`optimal_ndrange`
 * runtime (Tiny-OpenCL subset): :class:`Context`, :class:`Device`,
-  :class:`CommandQueue`, :class:`Kernel`, :class:`Buffer`, :class:`Event`
+  :class:`CommandQueue`, :class:`Kernel`, :class:`Buffer`, :class:`Event`,
+  :class:`CommandGraph` (fused capture/replay dispatch)
 * models: :func:`egpu_time`, :func:`host_time` (machine), :func:`characterize`,
   energy helpers (power)
 * APU: :class:`APU`, :class:`PipelineReport`
@@ -15,22 +16,26 @@ Public API:
 from .apu import APU, PipelineReport, Stage, StageReport
 from .device import (EGPU_4T, EGPU_8T, EGPU_16T, HOST, PRESETS, EGPUConfig,
                      KernelKnobs, check_vmem_budget)
-from .machine import CAL, PhaseBreakdown, WorkCounts, egpu_time, host_time, speedup
+from .machine import (CAL, PhaseBreakdown, WorkCounts, egpu_time,
+                      fuse_breakdowns, host_time, speedup)
 from .ndrange import NDRange, crop_from_groups, edge_mask, global_ids, pad_to_groups
 from .power import (StaticCharacter, characterize, egpu_active_power_mw,
                     egpu_energy_j, energy_reduction, host_active_power_mw,
                     host_energy_j)
-from .runtime import Buffer, CommandQueue, Context, Device, Event, Kernel
+from .runtime import (Buffer, CommandGraph, CommandQueue, Context, Device,
+                      Event, GraphBuffer, Kernel)
 from .scheduler import Schedule, optimal_ndrange, schedule
 
 __all__ = [
     "APU", "PipelineReport", "Stage", "StageReport",
     "EGPU_4T", "EGPU_8T", "EGPU_16T", "HOST", "PRESETS", "EGPUConfig",
     "KernelKnobs", "check_vmem_budget",
-    "CAL", "PhaseBreakdown", "WorkCounts", "egpu_time", "host_time", "speedup",
+    "CAL", "PhaseBreakdown", "WorkCounts", "egpu_time", "fuse_breakdowns",
+    "host_time", "speedup",
     "NDRange", "crop_from_groups", "edge_mask", "global_ids", "pad_to_groups",
     "StaticCharacter", "characterize", "egpu_active_power_mw", "egpu_energy_j",
     "energy_reduction", "host_active_power_mw", "host_energy_j",
-    "Buffer", "CommandQueue", "Context", "Device", "Event", "Kernel",
+    "Buffer", "CommandGraph", "CommandQueue", "Context", "Device", "Event",
+    "GraphBuffer", "Kernel",
     "Schedule", "optimal_ndrange", "schedule",
 ]

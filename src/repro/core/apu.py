@@ -5,6 +5,20 @@ against the same pipeline on the scalar host — producing exactly the
 speed-up / energy-reduction numbers of the paper's Fig. 4 (TinyBio) while
 also returning the functional outputs, so applications get real results and
 the evaluation in one call.
+
+Two dispatch modes (ISSUE 1):
+
+* ``mode="graph"`` (default) captures the whole stage chain into a TinyCL
+  :class:`~repro.core.runtime.CommandGraph` and launches it as **one** fused
+  XLA computation — the TPU analogue of the paper's §IV-B resident pipeline,
+  paying dispatch cost once per chain.  Kernels are pure functions of their
+  inputs, so the host comparison is costed analytically from the same
+  captured :class:`~repro.core.machine.WorkCounts` (the functional results
+  are identical by construction) instead of re-executing the chain.
+* ``mode="eager"`` re-runs both paths kernel-by-kernel through asynchronous
+  queues — the pre-graph behaviour, kept for A/B validation; graph and
+  eager produce bit-identical modeled reports and (up to XLA fusion
+  reassociation) the same functional outputs.
 """
 
 from __future__ import annotations
@@ -15,9 +29,9 @@ from typing import Any, Dict, List, Optional, Sequence, Tuple
 import jax
 
 from .device import EGPUConfig, EGPU_16T, HOST
-from .machine import PhaseBreakdown
+from .machine import PhaseBreakdown, fuse_breakdowns
 from .ndrange import NDRange
-from .runtime import Buffer, CommandQueue, Context, Device, Kernel
+from .runtime import Buffer, CommandGraph, CommandQueue, Context, Device, Kernel
 from .scheduler import optimal_ndrange
 
 
@@ -37,10 +51,10 @@ class StageReport:
     """Per-kernel comparison: the paper's Fig 4 bars."""
 
     name: str
-    egpu: PhaseBreakdown
-    host: PhaseBreakdown
-    egpu_energy_j: float
-    host_energy_j: float
+    egpu: Optional[PhaseBreakdown]      # None when the kernel has no counts
+    host: Optional[PhaseBreakdown]      # model or the queue is unprofiled
+    egpu_energy_j: Optional[float]
+    host_energy_j: Optional[float]
 
     @property
     def speedup(self) -> float:
@@ -54,18 +68,41 @@ class StageReport:
 @dataclasses.dataclass(frozen=True)
 class PipelineReport:
     stages: Tuple[StageReport, ...]
+    #: modeled breakdown of the fused (CommandGraph) launch — startup +
+    #: scheduling paid once per chain (None for eager mode)
+    egpu_fused: Optional[PhaseBreakdown] = None
+
+    def _modeled_stages(self) -> Tuple[StageReport, ...]:
+        return tuple(s for s in self.stages
+                     if s.host is not None and s.egpu is not None)
 
     @property
-    def overall_speedup(self) -> float:
-        h = sum(s.host.total_s for s in self.stages)
-        e = sum(s.egpu.total_s for s in self.stages)
+    def overall_speedup(self) -> Optional[float]:
+        """None when no stage carries a machine model (counts-less kernels
+        or an unprofiled queue) — the functional outputs still exist."""
+        modeled = self._modeled_stages()
+        if not modeled:
+            return None
+        h = sum(s.host.total_s for s in modeled)
+        e = sum(s.egpu.total_s for s in modeled)
         return h / e
 
     @property
-    def overall_energy_reduction(self) -> float:
-        h = sum(s.host_energy_j for s in self.stages)
-        e = sum(s.egpu_energy_j for s in self.stages)
+    def overall_energy_reduction(self) -> Optional[float]:
+        modeled = self._modeled_stages()
+        if not modeled:
+            return None
+        h = sum(s.host_energy_j for s in modeled)
+        e = sum(s.egpu_energy_j for s in modeled)
         return h / e
+
+    @property
+    def fused_speedup(self) -> Optional[float]:
+        """Host total vs the fused chain (per-chain dispatch accounting)."""
+        if self.egpu_fused is None or not self._modeled_stages():
+            return None
+        h = sum(s.host.total_s for s in self._modeled_stages())
+        return h / self.egpu_fused.total_s
 
 
 class APU:
@@ -77,38 +114,110 @@ class APU:
         self.egpu_ctx = Context(self.egpu)
         self.host_ctx = Context(self.host)
 
+    # -- shared stage wiring -----------------------------------------------
+    def wire_pipeline(self, q: CommandQueue, stages: Sequence["Stage"],
+                      inputs: Sequence[jax.Array],
+                      ndranges: Optional[Sequence[NDRange]] = None,
+                      resident_chain: bool = True
+                      ) -> Tuple[Tuple[Buffer, ...], list]:
+        """Enqueue the stage chain on ``q`` (works eagerly or under capture).
+
+        ``resident_chain=True`` applies the paper's §IV-B residency: after
+        the first kernel, intermediate data stays in the unified memory /
+        D$ — only stage 0 pays the host->D$ fill.  Returns (final buffers,
+        per-stage events).
+        """
+        ctx = q.ctx
+        bufs = tuple(ctx.create_buffer(x) for x in inputs)
+        evs = []
+        for i, stage in enumerate(stages):
+            ndr = (ndranges[i] if ndranges is not None
+                   else optimal_ndrange(bufs[0].data.size, ctx.device.config))
+            extra = tuple(ctx.create_buffer(x) for x in stage.consts)
+            take = bufs[:stage.n_inputs] if stage.n_inputs else bufs
+            ev = q.enqueue_nd_range(stage.kernel, ndr, take + extra,
+                                    params=stage.params,
+                                    counts_params=stage.counts_params,
+                                    _resident=resident_chain and i > 0)
+            bufs = ev.outputs
+            evs.append(ev)
+        return bufs, evs
+
+    def _host_costs(self, stages: Sequence["Stage"],
+                    ndranges: Optional[Sequence[NDRange]],
+                    graph: CommandGraph) -> List[Tuple[PhaseBreakdown, float]]:
+        """Analytic host-side cost of each stage (no execution needed).
+
+        Per-stage NDRanges are derived from each captured node's recorded
+        input size — exactly the sizes the eager host path would see — so
+        graph and eager host reports can never diverge."""
+        hq = CommandQueue(self.host_ctx)
+        costs = []
+        for i, (stage, node) in enumerate(zip(stages, graph.nodes)):
+            ndr = (ndranges[i] if ndranges is not None
+                   else optimal_ndrange(node.n_items, self.host.config))
+            costs.append(hq._model(stage.kernel, ndr, stage.counts_params,
+                                   resident=False))
+        return costs
+
     def offload(self, stages: Sequence["Stage"],
                 inputs: Sequence[jax.Array],
                 ndranges: Optional[Sequence[NDRange]] = None,
+                mode: str = "graph",
                 ) -> Tuple[Tuple[Buffer, ...], PipelineReport]:
         """Run :class:`Stage`\\ s as a dataflow pipeline.
 
         Each stage consumes the previous stage's outputs (plus extra
         constant buffers it declares).  Returns the final outputs (computed
         on the e-GPU path) and the host-vs-e-GPU :class:`PipelineReport`.
+        ``mode`` selects fused CommandGraph dispatch (``"graph"``, default)
+        or per-kernel eager dispatch (``"eager"``).
         """
-        reports: List[StageReport] = []
-        final: Tuple[Buffer, ...] = ()
+        if mode not in ("graph", "eager"):
+            raise ValueError(f"unknown offload mode {mode!r}")
+        if mode == "graph":
+            return self._offload_graph(stages, inputs, ndranges)
+        return self._offload_eager(stages, inputs, ndranges)
 
+    # -- fused CommandGraph path -------------------------------------------
+    def capture_pipeline(self, stages: Sequence["Stage"],
+                         inputs: Sequence[jax.Array],
+                         ndranges: Optional[Sequence[NDRange]] = None,
+                         ) -> CommandGraph:
+        """Capture the stage chain on the e-GPU queue into a reusable
+        :class:`~repro.core.runtime.CommandGraph` (launch it repeatedly,
+        amortizing both jit compilation and per-kernel dispatch)."""
+        q = CommandQueue(self.egpu_ctx)
+        with q.capture() as graph:
+            self.wire_pipeline(q, stages, inputs, ndranges,
+                               resident_chain=True)
+        return graph
+
+    def _offload_graph(self, stages, inputs, ndranges):
+        graph = self.capture_pipeline(stages, inputs, ndranges)
+        q = graph.queue
+        final = graph.launch()
+        q.finish()
+        host = self._host_costs(stages, ndranges, graph)
+        reports = tuple(
+            StageReport(name=stage.kernel.name, egpu=node.modeled,
+                        host=h_mod, egpu_energy_j=node.energy_j,
+                        host_energy_j=h_en)
+            for stage, node, (h_mod, h_en)
+            in zip(stages, graph.nodes, host))
+        # Kernels without a counts model (or an unprofiled queue) still get
+        # their functional outputs — there is just no fused cost to report.
+        mods = [m for m in graph.modeled_breakdowns() if m is not None]
+        fused = fuse_breakdowns(mods) if mods else None
+        return final, PipelineReport(reports, egpu_fused=fused)
+
+    # -- per-kernel eager path ---------------------------------------------
+    def _offload_eager(self, stages, inputs, ndranges):
+        final: Tuple[Buffer, ...] = ()
         for which, ctx in (("egpu", self.egpu_ctx), ("host", self.host_ctx)):
             q = CommandQueue(ctx)
-            bufs = tuple(ctx.create_buffer(x) for x in inputs)
-            evs = []
-            for i, stage in enumerate(stages):
-                ndr = (ndranges[i] if ndranges is not None
-                       else optimal_ndrange(bufs[0].data.size, ctx.device.config))
-                extra = tuple(ctx.create_buffer(x) for x in stage.consts)
-                take = bufs[:stage.n_inputs] if stage.n_inputs else bufs
-                # Resident pipeline (paper §IV-B): after the first kernel,
-                # intermediate data stays in the unified memory / D$ — only
-                # stage 0 pays the host->D$ fill on the e-GPU path.
-                resident = (which == "egpu" and i > 0)
-                ev = q.enqueue_nd_range(stage.kernel, ndr, take + extra,
-                                        params=stage.params,
-                                        counts_params=stage.counts_params,
-                                        _resident=resident)
-                bufs = ev.outputs
-                evs.append(ev)
+            bufs, evs = self.wire_pipeline(q, stages, inputs, ndranges,
+                                           resident_chain=which == "egpu")
             q.finish()
             if which == "egpu":
                 final = bufs
@@ -116,8 +225,9 @@ class APU:
             else:
                 host_evs = evs
 
-        for e_ev, h_ev, stage in zip(egpu_evs, host_evs, stages):
-            reports.append(StageReport(
-                name=stage.kernel.name, egpu=e_ev.modeled, host=h_ev.modeled,
-                egpu_energy_j=e_ev.energy_j, host_energy_j=h_ev.energy_j))
-        return final, PipelineReport(tuple(reports))
+        reports = tuple(
+            StageReport(name=stage.kernel.name, egpu=e_ev.modeled,
+                        host=h_ev.modeled, egpu_energy_j=e_ev.energy_j,
+                        host_energy_j=h_ev.energy_j)
+            for e_ev, h_ev, stage in zip(egpu_evs, host_evs, stages))
+        return final, PipelineReport(reports)

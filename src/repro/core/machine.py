@@ -25,7 +25,7 @@ All calibration constants live in :data:`CAL` and are documented there.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict
+from typing import Dict, Sequence
 
 from .device import EGPUConfig, HOST
 from .ndrange import NDRange
@@ -161,3 +161,29 @@ def host_time(counts: WorkCounts, config: EGPUConfig = HOST) -> PhaseBreakdown:
 
 def speedup(host: PhaseBreakdown, egpu: PhaseBreakdown) -> float:
     return host.total_s / egpu.total_s
+
+
+def fuse_breakdowns(stages: "Sequence[PhaseBreakdown]") -> PhaseBreakdown:
+    """Model a fused (CommandGraph) launch of an already-costed kernel chain.
+
+    The paper's §IV-B resident pipeline pays the Tiny-OpenCL startup +
+    scheduling once per *chain*, not once per kernel: after the first launch
+    the warps are active and the kernel-args region is hot, so subsequent
+    stages chain without re-entering the scheduler.  Transfer and compute
+    phases are work, not overhead — they sum unchanged.  This mirrors the
+    TinyCL ``CommandGraph.launch`` path, which dispatches the whole chain as
+    one XLA computation.
+    """
+    stages = [s for s in stages if s is not None]
+    if not stages:
+        raise ValueError("fuse_breakdowns needs at least one PhaseBreakdown")
+    freq = stages[0].freq_hz
+    if any(s.freq_hz != freq for s in stages):
+        raise ValueError("cannot fuse breakdowns across devices/frequencies")
+    return PhaseBreakdown(
+        startup=max(s.startup for s in stages),
+        scheduling=max(s.scheduling for s in stages),
+        transfer=sum(s.transfer for s in stages),
+        compute=sum(s.compute for s in stages),
+        freq_hz=freq,
+    )

@@ -18,6 +18,38 @@ with JAX semantics:
 * events chain: kernels consuming a prior event's outputs execute after it
   (JAX dataflow gives this for free, matching in-order OpenCL queues).
 
+Execution model — asynchronous dispatch (paper §VIII-B)
+-------------------------------------------------------
+
+``enqueue_nd_range`` is **non-blocking**: it hands the launch to XLA and
+returns immediately with an :class:`Event` whose output buffers hold
+*unrealized* ``jax.Array``\\ s.  Back-to-back enqueues therefore overlap
+host-side dispatch with device compute — true in-order OpenCL queue
+semantics.  Synchronization points are explicit:
+
+* ``Event.wait()`` blocks until that launch (and, by in-order dataflow,
+  everything it depends on) completed;
+* ``CommandQueue.finish()`` drains the whole queue (``clFinish``);
+* ``CommandQueue(..., blocking=True)`` restores the old eager-sync behaviour
+  (one host↔device round-trip per launch) for A/B benchmarking.
+
+Execution model — CommandGraph fused dispatch (paper §IV-B)
+-----------------------------------------------------------
+
+The paper's TinyBio pipeline chains kernels whose intermediates stay
+*resident* in the unified memory; the scheduling cost is paid per launch,
+not per byte.  The TPU analogue is whole-chain fusion: ``queue.capture()``
+records every ``enqueue_nd_range`` issued inside the ``with`` block —
+without executing it (output shapes come from ``jax.eval_shape``) — into a
+:class:`CommandGraph`.  ``graph.launch(*inputs)`` then replays the entire
+chain as **one** jitted XLA computation: intermediates never materialize as
+separate dispatches, XLA reuses their buffers, and optional
+``donate_argnums`` donation extends that reuse to the graph's external
+inputs.  Dispatch cost is paid once per graph instead of once per kernel.
+Per-stage machine-model accounting is preserved: each captured node is
+costed from its recorded ``WorkCounts`` at capture time (the captured
+schedule), not from wall clock.
+
 Kernels are executed functionally (outputs are fresh buffers); this is the
 one semantic departure from OpenCL's in-place buffer writes and is what makes
 every kernel jit/grad/vmap-compatible.
@@ -27,7 +59,8 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Any, Callable, Dict, Optional, Sequence, Tuple
+import warnings
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -62,6 +95,24 @@ class Buffer:
         return self.data
 
 
+class GraphBuffer(Buffer):
+    """A symbolic buffer produced while capturing a :class:`CommandGraph`.
+
+    Carries only a ``jax.ShapeDtypeStruct`` (shape/dtype/size all work); the
+    concrete value exists only inside the fused computation at launch time.
+    """
+
+    def __init__(self, aval: jax.ShapeDtypeStruct, slot: int):
+        self.data = aval          # duck-types shape/dtype/size for wiring code
+        self.flags = "rw"
+        self.slot = slot
+
+    def read(self) -> jax.Array:
+        raise RuntimeError(
+            "GraphBuffer holds no data during capture; launch the graph and "
+            "read its outputs instead.")
+
+
 @dataclasses.dataclass(frozen=True)
 class Kernel:
     """An OpenCL kernel: executor + structural work counts.
@@ -69,29 +120,393 @@ class Kernel:
     ``executor(*arrays, **params) -> array | tuple[array]`` must be pure.
     ``counts(**params) -> WorkCounts`` derives the machine-model inputs from
     the problem size (shapes are passed through ``params`` by the caller).
+    ``jitted=True`` marks executors that are already ``jax.jit``-wrapped
+    (the ``repro.kernels.*.ops`` wrappers): the queue dispatches them
+    directly instead of stacking a second jit on top.
     """
 
     name: str
     executor: Callable[..., Any]
     counts: Optional[Callable[..., WorkCounts]] = None
+    jitted: bool = False
 
 
 class Event:
-    """Kernel-completion event: functional results + modeled time/energy."""
+    """Kernel-completion event: functional results + modeled time/energy.
+
+    ``dispatch_s`` is the host-side time to *enqueue* the launch (the queue
+    is asynchronous, so this excludes device compute); ``wait()`` blocks
+    until the results are realized.  ``wall_s`` is kept as an alias of
+    ``dispatch_s`` for older call sites.
+    """
 
     def __init__(self, kernel: Kernel, outputs: Tuple[Buffer, ...],
                  modeled: Optional[PhaseBreakdown], energy_j: Optional[float],
-                 wall_s: float):
+                 dispatch_s: float):
         self.kernel = kernel
         self.outputs = outputs
         self.modeled = modeled
         self.energy_j = energy_j
-        self.wall_s = wall_s
+        self.dispatch_s = dispatch_s
+        self._done = False
+
+    @property
+    def wall_s(self) -> float:
+        return self.dispatch_s
+
+    @property
+    def done(self) -> bool:
+        return self._done
 
     def wait(self) -> Tuple[Buffer, ...]:
         for b in self.outputs:
-            b.data.block_until_ready()
+            if isinstance(b.data, jax.Array):
+                b.data.block_until_ready()
+        self._done = True
         return self.outputs
+
+
+def _static_signature(params: Dict[str, Any]) -> Tuple[str, ...]:
+    """Param names that must be jit-static (everything that isn't an array)."""
+    return tuple(sorted(
+        k for k, v in params.items()
+        if not isinstance(v, (jax.Array, jnp.ndarray))))
+
+
+class CommandQueue:
+    """An in-order command queue bound to one device.
+
+    ``blocking=False`` (default) gives asynchronous OpenCL semantics: enqueue
+    returns immediately and only ``Event.wait()`` / :meth:`finish`
+    synchronize.  ``blocking=True`` restores eager-sync dispatch (one device
+    round-trip per kernel) for overhead A/B comparisons.
+    """
+
+    def __init__(self, ctx: Context, profile: bool = True,
+                 blocking: bool = False):
+        self.ctx = ctx
+        self.profile = profile
+        self.blocking = blocking
+        self._events: List[Event] = []
+        self._drained = 0              # finish() watermark: events before
+                                       # this index are already waited
+        # Keyed on (kernel, static-arg signature): the same kernel enqueued
+        # with a different static/traced split gets its own jit wrapper
+        # instead of silently reusing the first call's (see ISSUE 1).
+        self._jit_cache: Dict[Tuple[Kernel, Tuple[str, ...]], Callable] = {}
+        self._capture: Optional[CommandGraph] = None
+
+    # -- jit plumbing ------------------------------------------------------
+    def _executor_for(self, kernel: Kernel, params: Dict[str, Any]) -> Callable:
+        if kernel.jitted:
+            return kernel.executor
+        statics = _static_signature(params)
+        key = (kernel, statics)
+        fn = self._jit_cache.get(key)
+        if fn is None:
+            fn = jax.jit(kernel.executor, static_argnames=statics)
+            self._jit_cache[key] = fn
+        return fn
+
+    def _model(self, kernel: Kernel, ndr: NDRange,
+               counts_params: Dict[str, Any], resident: bool
+               ) -> Tuple[Optional[PhaseBreakdown], Optional[float]]:
+        if not self.profile or kernel.counts is None:
+            return None, None
+        counts = kernel.counts(**counts_params)
+        if resident:
+            counts = dataclasses.replace(counts, host_bytes=0.0)
+        cfg = self.ctx.device.config
+        if self.ctx.device.is_host:
+            modeled = host_time(counts, cfg)
+            return modeled, host_energy_j(modeled)
+        modeled = egpu_time(cfg, counts, ndr)
+        return modeled, egpu_energy_j(cfg, modeled)
+
+    # -- the OpenCL-subset entry point -------------------------------------
+    def enqueue_nd_range(self, kernel: Kernel, ndr: NDRange,
+                         args: Sequence[Buffer],
+                         params: Optional[Dict[str, Any]] = None,
+                         counts_params: Optional[Dict[str, Any]] = None,
+                         _resident: bool = False) -> Event:
+        """Launch ``kernel`` over ``ndr`` with buffer ``args`` (non-blocking).
+
+        ``params`` are executor kwargs (the paper's kernel-args region);
+        ``counts_params`` are the problem sizes handed to the kernel's
+        ``counts()`` for the machine model (defaults to ``params``).
+        ``_resident=True`` marks a stage whose inputs are already resident
+        in the unified memory / D$ (paper §IV-B pipeline chaining): the
+        modeled host<->D$ transfer is waived for it.
+
+        Inside a :meth:`capture` block the launch is recorded into the
+        active :class:`CommandGraph` instead of executed; the returned
+        event carries symbolic :class:`GraphBuffer` outputs.
+        """
+        params = params or {}
+        cp = counts_params if counts_params is not None else params
+        if self._capture is not None:
+            return self._capture._record(kernel, ndr, args, params, cp,
+                                         _resident)
+        fn = self._executor_for(kernel, params)
+        t0 = time.perf_counter()
+        raw = fn(*[b.data for b in args], **params)
+        if self.blocking:
+            jax.block_until_ready(raw)
+        dispatch = time.perf_counter() - t0
+        outs = tuple(Buffer(r) for r in (raw if isinstance(raw, tuple) else (raw,)))
+
+        modeled, energy = self._model(kernel, ndr, cp, _resident)
+        ev = Event(kernel, outs, modeled, energy, dispatch)
+        if self.blocking:
+            ev._done = True
+        self._events.append(ev)
+        return ev
+
+    # -- graph capture ------------------------------------------------------
+    def capture(self) -> "CommandGraph":
+        """Record subsequent enqueues into a :class:`CommandGraph`.
+
+        Use as a context manager::
+
+            with q.capture() as graph:
+                q.enqueue_nd_range(k1, ndr, (a, b))   # recorded, not run
+                ...
+            outs = graph.launch()                      # one fused dispatch
+
+        Launches inside the block are traced abstractly (``jax.eval_shape``)
+        so capture itself never touches the device.
+        """
+        return CommandGraph(self)
+
+    def flush(self) -> None:
+        """clFlush — dispatch is eager under JAX, so this is a no-op."""
+
+    def finish(self) -> None:
+        """Block until every enqueued kernel completed (clFinish).
+
+        Only events enqueued since the last ``finish()`` are waited (a
+        drained-watermark: repeated drains on a long-lived queue stay O(new
+        work), not O(full history))."""
+        for ev in self._events[self._drained:]:
+            ev.wait()
+        self._drained = len(self._events)
+
+    @property
+    def events(self) -> Tuple[Event, ...]:
+        return tuple(self._events)
+
+    def total_modeled_s(self) -> float:
+        # `is not None`, not truthiness: an all-zero PhaseBreakdown (e.g. a
+        # fully resident stage) must still be counted.
+        return sum(e.modeled.total_s for e in self._events
+                   if e.modeled is not None)
+
+    def total_energy_j(self) -> float:
+        return sum(e.energy_j for e in self._events if e.energy_j is not None)
+
+
+@dataclasses.dataclass
+class GraphNode:
+    """One captured launch: kernel + wiring + capture-time machine model."""
+
+    kernel: Kernel
+    call: Callable[..., Any]            # executor with params pre-bound
+    in_slots: Tuple[int, ...]
+    out_slots: Tuple[int, ...]
+    out_avals: Tuple[jax.ShapeDtypeStruct, ...]
+    modeled: Optional[PhaseBreakdown]
+    energy_j: Optional[float]
+    n_items: int = 0                    # first input's element count (the
+                                        # NDRange sizing the eager path uses)
+
+
+class CommandGraph:
+    """A captured kernel chain, launched as one fused XLA computation.
+
+    Built by :meth:`CommandQueue.capture`.  While capturing, every
+    ``enqueue_nd_range`` appends a :class:`GraphNode`: inputs are resolved to
+    *slots* — either graph-external buffers (concrete data seen during
+    capture) or earlier nodes' outputs — and output shapes come from
+    ``jax.eval_shape``, so nothing executes.  :meth:`launch` replays all
+    nodes inside a single ``jax.jit``; the graph's outputs are the final
+    node's outputs.
+
+    Per-node ``modeled`` / ``energy_j`` come from the captured schedule
+    (``WorkCounts`` at capture time), giving the same per-stage Fig-3/Fig-4
+    accounting as eager dispatch while the wall-clock path is fused.
+    """
+
+    def __init__(self, queue: CommandQueue):
+        self.queue = queue
+        self.nodes: List[GraphNode] = []
+        self._n_slots = 0
+        self._ext_slots: List[int] = []        # slot index of each external
+        self._ext_values: List[jax.Array] = [] # captured concrete externals
+        self._ext_avals: List[jax.ShapeDtypeStruct] = []
+        self._buf_slot: Dict[int, int] = {}    # id(Buffer) -> slot
+        self._bufs_alive: List[Buffer] = []    # keep ids stable during capture
+        self._jit_cache: Dict[Tuple[Any, ...], Callable] = {}
+        self._sealed = False
+
+    # -- capture ------------------------------------------------------------
+    def __enter__(self) -> "CommandGraph":
+        if self.queue._capture is not None:
+            raise RuntimeError("CommandQueue is already capturing")
+        self.queue._capture = self
+        return self
+
+    def __exit__(self, exc_type, exc, tb) -> None:
+        self.queue._capture = None
+        # Only a capture body that completed cleanly yields a launchable
+        # graph; an exception mid-capture leaves a truncated chain.
+        self._sealed = exc_type is None
+
+    def _slot_of(self, buf: Buffer) -> int:
+        slot = self._buf_slot.get(id(buf))
+        if slot is None:
+            if isinstance(buf, GraphBuffer):
+                raise RuntimeError(
+                    "GraphBuffer from a different capture passed as input")
+            slot = self._new_slot()
+            self._buf_slot[id(buf)] = slot
+            self._bufs_alive.append(buf)
+            self._ext_slots.append(slot)
+            self._ext_values.append(buf.data)
+            self._ext_avals.append(
+                jax.ShapeDtypeStruct(buf.data.shape, buf.data.dtype))
+        return slot
+
+    def _new_slot(self) -> int:
+        s = self._n_slots
+        self._n_slots += 1
+        return s
+
+    def _record(self, kernel: Kernel, ndr: NDRange, args: Sequence[Buffer],
+                params: Dict[str, Any], counts_params: Dict[str, Any],
+                resident: bool) -> Event:
+        in_slots = tuple(self._slot_of(b) for b in args)
+        in_avals = tuple(
+            jax.ShapeDtypeStruct(b.data.shape, b.data.dtype) for b in args)
+
+        def call(*arrays, _exe=kernel.executor, _params=dict(params)):
+            out = _exe(*arrays, **_params)
+            return out if isinstance(out, tuple) else (out,)
+
+        out_avals = tuple(jax.eval_shape(call, *in_avals))
+        out_slots = tuple(self._new_slot() for _ in out_avals)
+        modeled, energy = self.queue._model(kernel, ndr, counts_params,
+                                            resident)
+        self.nodes.append(GraphNode(kernel, call, in_slots, out_slots,
+                                    out_avals, modeled, energy,
+                                    n_items=int(args[0].data.size)
+                                    if args else 0))
+        outs = tuple(GraphBuffer(a, s) for a, s in zip(out_avals, out_slots))
+        for b in outs:
+            self._buf_slot[id(b)] = b.slot
+            self._bufs_alive.append(b)
+        return Event(kernel, outs, modeled, energy, 0.0)
+
+    # -- accounting ---------------------------------------------------------
+    @property
+    def n_external(self) -> int:
+        return len(self._ext_slots)
+
+    def modeled_breakdowns(self) -> Tuple[Optional[PhaseBreakdown], ...]:
+        return tuple(n.modeled for n in self.nodes)
+
+    def total_modeled_s(self) -> float:
+        return sum(n.modeled.total_s for n in self.nodes
+                   if n.modeled is not None)
+
+    def total_energy_j(self) -> float:
+        return sum(n.energy_j for n in self.nodes if n.energy_j is not None)
+
+    # -- launch -------------------------------------------------------------
+    def _fused(self, donate: Tuple[int, ...]) -> Callable:
+        key = donate
+        fn = self._jit_cache.get(key)
+        if fn is not None:
+            return fn
+
+        nodes = tuple(self.nodes)
+        ext_slots = tuple(self._ext_slots)
+        out_slots = nodes[-1].out_slots
+        n_slots = self._n_slots
+
+        def run(*ext):
+            vals: List[Any] = [None] * n_slots
+            for slot, v in zip(ext_slots, ext):
+                vals[slot] = v
+            for node in nodes:
+                outs = node.call(*[vals[s] for s in node.in_slots])
+                for slot, o in zip(node.out_slots, outs):
+                    vals[slot] = o
+            return tuple(vals[s] for s in out_slots)
+
+        fn = jax.jit(run, donate_argnums=donate)
+        self._jit_cache[key] = fn
+        return fn
+
+    def launch(self, *inputs: Any, donate: Sequence[int] = (),
+               queue_events: bool = True) -> Tuple[Buffer, ...]:
+        """Execute the captured chain as one fused dispatch (non-blocking).
+
+        ``inputs`` replace the graph's external buffers in capture order
+        (shapes/dtypes must match); with no inputs the arrays captured at
+        record time are reused.  ``donate`` lists external-input positions
+        whose device buffers XLA may reuse for the computation (jit
+        ``donate_argnums``); never pass an index whose buffer the caller
+        still needs.  Backends without donation support (CPU) silently
+        ignore it.  Returns the final node's outputs as fresh buffers;
+        per-node modeled events are appended to the owning queue so
+        ``finish()`` / modeled totals keep working.
+        """
+        if self.queue._capture is self:
+            raise RuntimeError("cannot launch while still capturing")
+        if not self._sealed:
+            raise RuntimeError(
+                "capture did not complete cleanly; re-capture the chain "
+                "before launching")
+        if not self.nodes:
+            raise RuntimeError("cannot launch an empty CommandGraph")
+        if donate and not inputs:
+            # Donating the graph's own captured arrays would poison every
+            # later zero-argument launch on backends that honor donation.
+            raise ValueError(
+                "donate requires explicit launch inputs: the captured "
+                "external arrays must stay valid for later launches")
+        ext = list(inputs) if inputs else list(self._ext_values)
+        if len(ext) != len(self._ext_slots):
+            raise ValueError(
+                f"graph takes {len(self._ext_slots)} external inputs, "
+                f"got {len(ext)}")
+        ext = [jnp.asarray(x) for x in ext]
+        # Shape/dtype must match the capture: a silent retrace would attach
+        # capture-time modeled costs to a differently-sized computation.
+        for i, (x, aval) in enumerate(zip(ext, self._ext_avals)):
+            if x.shape != aval.shape or x.dtype != aval.dtype:
+                raise ValueError(
+                    f"launch input {i} is {x.shape}/{x.dtype}, but the graph "
+                    f"was captured with {aval.shape}/{aval.dtype}; re-capture "
+                    "for a different problem size")
+        fn = self._fused(tuple(sorted(int(i) for i in donate)))
+        t0 = time.perf_counter()
+        with warnings.catch_warnings():
+            # CPU backends warn that donated buffers were unused; donation
+            # is best-effort there by design.
+            warnings.filterwarnings(
+                "ignore", message=".*donated.*", category=UserWarning)
+            raw = fn(*ext)
+        dispatch = time.perf_counter() - t0
+        outs = tuple(Buffer(r) for r in raw)
+        if queue_events:
+            for i, node in enumerate(self.nodes):
+                node_outs = outs if i == len(self.nodes) - 1 else ()
+                per_node = dispatch if i == 0 else 0.0
+                self.queue._events.append(Event(
+                    node.kernel, node_outs, node.modeled, node.energy_j,
+                    per_node))
+        return outs
 
 
 class Device:
@@ -111,72 +526,3 @@ class Context:
 
     def create_buffer(self, data, flags: str = "rw") -> Buffer:
         return Buffer(jnp.asarray(data), flags)
-
-
-class CommandQueue:
-    """An in-order command queue bound to one device."""
-
-    def __init__(self, ctx: Context, profile: bool = True):
-        self.ctx = ctx
-        self.profile = profile
-        self._events: list[Event] = []
-        self._jit_cache: Dict[str, Callable] = {}
-
-    # -- the OpenCL-subset entry point -------------------------------------
-    def enqueue_nd_range(self, kernel: Kernel, ndr: NDRange,
-                         args: Sequence[Buffer],
-                         params: Optional[Dict[str, Any]] = None,
-                         counts_params: Optional[Dict[str, Any]] = None,
-                         _resident: bool = False) -> Event:
-        """Launch ``kernel`` over ``ndr`` with buffer ``args``.
-
-        ``params`` are executor kwargs (the paper's kernel-args region);
-        ``counts_params`` are the problem sizes handed to the kernel's
-        ``counts()`` for the machine model (defaults to ``params``).
-        ``_resident=True`` marks a stage whose inputs are already resident
-        in the unified memory / D$ (paper §IV-B pipeline chaining): the
-        modeled host<->D$ transfer is waived for it.
-        """
-        params = params or {}
-        fn = self._jit_cache.get(kernel.name)
-        if fn is None:
-            fn = jax.jit(kernel.executor, static_argnames=tuple(
-                k for k, v in params.items() if not isinstance(v, (jax.Array, jnp.ndarray))))
-            self._jit_cache[kernel.name] = fn
-        t0 = time.perf_counter()
-        raw = fn(*[b.data for b in args], **params)
-        jax.block_until_ready(raw)
-        wall = time.perf_counter() - t0
-        outs = tuple(Buffer(r) for r in (raw if isinstance(raw, tuple) else (raw,)))
-
-        modeled = energy = None
-        if self.profile and kernel.counts is not None:
-            counts = kernel.counts(**(counts_params if counts_params
-                                      is not None else params))
-            if _resident:
-                counts = dataclasses.replace(counts, host_bytes=0.0)
-            cfg = self.ctx.device.config
-            if self.ctx.device.is_host:
-                modeled = host_time(counts, cfg)
-                energy = host_energy_j(modeled)
-            else:
-                modeled = egpu_time(cfg, counts, ndr)
-                energy = egpu_energy_j(cfg, modeled)
-        ev = Event(kernel, outs, modeled, energy, wall)
-        self._events.append(ev)
-        return ev
-
-    def finish(self) -> None:
-        """Block until every enqueued kernel completed (clFinish)."""
-        for ev in self._events:
-            ev.wait()
-
-    @property
-    def events(self) -> Tuple[Event, ...]:
-        return tuple(self._events)
-
-    def total_modeled_s(self) -> float:
-        return sum(e.modeled.total_s for e in self._events if e.modeled)
-
-    def total_energy_j(self) -> float:
-        return sum(e.energy_j for e in self._events if e.energy_j)

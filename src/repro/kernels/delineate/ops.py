@@ -37,4 +37,5 @@ def make_kernel(config: EGPUConfig = EGPU_16T, use_pallas: bool = True) -> Kerne
         name="delineate",
         executor=exe,
         counts=lambda n, itemsize=4: delineate_counts(n, itemsize),
+        jitted=use_pallas,   # `delineate` is already jax.jit-wrapped
     )

@@ -35,4 +35,5 @@ def make_kernel(config: EGPUConfig = EGPU_16T, use_pallas: bool = True) -> Kerne
         name="fir",
         executor=exe,
         counts=lambda n, taps, itemsize=4: fir_counts(n, taps, itemsize),
+        jitted=use_pallas,   # `fir` is already jax.jit-wrapped
     )

@@ -38,4 +38,5 @@ def make_kernel(config: EGPUConfig = EGPU_16T, use_pallas: bool = True) -> Kerne
         name="gemm",
         executor=exe,
         counts=lambda m, n, k, itemsize=4: gemm_counts(m, n, k, itemsize),
+        jitted=use_pallas,   # `gemm` is already jax.jit-wrapped
     )

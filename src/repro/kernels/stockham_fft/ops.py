@@ -38,4 +38,5 @@ def make_kernel(config: EGPUConfig = EGPU_16T, use_pallas: bool = True) -> Kerne
         name="stockham_fft",
         executor=fft if use_pallas else ref_exec,
         counts=lambda n, itemsize=4: fft_counts(n, itemsize),
+        jitted=use_pallas,   # `fft` is already jax.jit-wrapped
     )

@@ -34,4 +34,5 @@ def make_kernel(config: EGPUConfig = EGPU_16T, use_pallas: bool = True) -> Kerne
         name="svm",
         executor=exe,
         counts=lambda q, m, d, itemsize=4, rbf=True: svm_counts(q, m, d, itemsize, rbf),
+        jitted=use_pallas,   # `svm_decision` is already jax.jit-wrapped
     )

@@ -5,6 +5,8 @@ import math
 import jax.numpy as jnp
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis")      # not baked into every image
 from hypothesis import given, settings
 from hypothesis import strategies as st
 

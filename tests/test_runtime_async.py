@@ -1,0 +1,333 @@
+"""Async TinyCL queue + CommandGraph semantics (ISSUE 1).
+
+Covers the new execution model: non-blocking enqueue with in-order event
+chaining, ``finish()`` draining, jit-cache correctness across static-arg
+signatures, zero-cost events in the queue totals, graph capture/launch
+equivalence with eager dispatch (including the full TinyBio pipeline), and
+buffer-donation safety.
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.apps.tinybio import run_tinybio, tinybio_stages
+from repro.core import (APU, EGPU_16T, CommandQueue, Context, Device, Event,
+                        GraphBuffer, Kernel, NDRange, PhaseBreakdown, Stage,
+                        WorkCounts, fuse_breakdowns)
+from repro.kernels.gemm.ref import gemm_ref
+
+NDR = NDRange((8, 8), (4, 4))
+
+
+def _ctx():
+    return Context(Device(EGPU_16T))
+
+
+def _mm_kernel():
+    return Kernel(name="mm", executor=gemm_ref)
+
+
+# ---------------------------------------------------------------------------
+# Asynchronous queue semantics
+# ---------------------------------------------------------------------------
+def test_async_enqueue_chains_in_order():
+    ctx = _ctx()
+    q = CommandQueue(ctx, profile=False)
+    a = ctx.create_buffer(jnp.arange(64, dtype=jnp.float32).reshape(8, 8))
+    eye = ctx.create_buffer(jnp.eye(8, dtype=jnp.float32))
+    e1 = q.enqueue_nd_range(_mm_kernel(), NDR, (a, eye))
+    assert not e1.done                   # non-blocking: not yet synchronized
+    e2 = q.enqueue_nd_range(_mm_kernel(), NDR, e1.outputs + (eye,))
+    (out,) = e2.wait()
+    assert e2.done
+    np.testing.assert_allclose(np.asarray(out.data), np.asarray(a.data))
+
+
+def test_finish_drains_all_events():
+    ctx = _ctx()
+    q = CommandQueue(ctx, profile=False)
+    a = ctx.create_buffer(jnp.ones((8, 8), jnp.float32))
+    evs = [q.enqueue_nd_range(_mm_kernel(), NDR, (a, a)) for _ in range(4)]
+    assert not any(e.done for e in evs)
+    q.finish()
+    assert all(e.done for e in evs)
+
+
+def test_finish_watermark_only_drains_new_events():
+    ctx = _ctx()
+    q = CommandQueue(ctx, profile=False)
+    a = ctx.create_buffer(jnp.ones((8, 8), jnp.float32))
+    q.enqueue_nd_range(_mm_kernel(), NDR, (a, a))
+    q.finish()
+    assert q._drained == 1
+    e2 = q.enqueue_nd_range(_mm_kernel(), NDR, (a, a))
+    q.finish()                           # drains only the new event
+    assert q._drained == 2 and e2.done
+    q.finish()                           # idempotent on a drained queue
+    assert q._drained == 2
+
+
+def test_blocking_queue_syncs_each_launch():
+    ctx = _ctx()
+    q = CommandQueue(ctx, profile=False, blocking=True)
+    a = ctx.create_buffer(jnp.ones((8, 8), jnp.float32))
+    ev = q.enqueue_nd_range(_mm_kernel(), NDR, (a, a))
+    assert ev.done
+
+
+# ---------------------------------------------------------------------------
+# jit cache keyed on static-arg signature (satellite fix)
+# ---------------------------------------------------------------------------
+def test_jit_cache_not_frozen_on_first_call_statics():
+    """The same kernel may be enqueued with a param as a static python value
+    in one call and as a traced array in the next; each (name, statics)
+    signature must get its own jit wrapper."""
+    ctx = _ctx()
+    q = CommandQueue(ctx, profile=False)
+    kern = Kernel(name="scale", executor=lambda x, scale=1.0: x * scale)
+    a = ctx.create_buffer(jnp.ones(4, jnp.float32))
+
+    (o1,) = q.enqueue_nd_range(kern, NDR, (a,),
+                               params={"scale": 2.0}).wait()
+    # same kernel, scale now a jax array — the old cache reused the wrapper
+    # with static_argnames=("scale",) and crashed on the unhashable array
+    (o2,) = q.enqueue_nd_range(kern, NDR, (a,),
+                               params={"scale": jnp.float32(3.0)}).wait()
+    np.testing.assert_allclose(np.asarray(o1.data), 2.0 * np.ones(4))
+    np.testing.assert_allclose(np.asarray(o2.data), 3.0 * np.ones(4))
+
+
+def test_jit_cache_shape_static_added_after_first_call():
+    ctx = _ctx()
+    q = CommandQueue(ctx, profile=False)
+    kern = Kernel(name="reshape",
+                  executor=lambda x, rows=1: x.reshape(rows, -1))
+    a = ctx.create_buffer(jnp.arange(8, dtype=jnp.float32))
+    (o1,) = q.enqueue_nd_range(kern, NDR, (a,)).wait()
+    # `rows` must be static (used in a shape); the old cache jitted with the
+    # first call's empty static set, so this traced `rows` and crashed
+    (o2,) = q.enqueue_nd_range(kern, NDR, (a,), params={"rows": 2}).wait()
+    assert o1.data.shape == (1, 8)
+    assert o2.data.shape == (2, 4)
+
+
+# ---------------------------------------------------------------------------
+# Queue totals must not drop zero-valued costs (satellite fix)
+# ---------------------------------------------------------------------------
+def test_totals_count_zero_cost_events():
+    ctx = _ctx()
+    q = CommandQueue(ctx, profile=False)
+    pb = PhaseBreakdown(startup=0.0, scheduling=0.0, transfer=0.0,
+                        compute=300.0, freq_hz=300e6)
+    zero_pb = PhaseBreakdown(0.0, 0.0, 0.0, 0.0, freq_hz=300e6)
+    k = _mm_kernel()
+    q._events.extend([
+        Event(k, (), pb, 1e-6, 0.0),
+        Event(k, (), zero_pb, 0.0, 0.0),     # legit fully-resident stage
+        Event(k, (), None, None, 0.0),       # unprofiled launch
+    ])
+    assert q.total_modeled_s() == pytest.approx(pb.total_s)
+    assert q.total_energy_j() == pytest.approx(1e-6)
+    # the zero-cost event is *counted* (is-not-None filter), not dropped
+    counted = [e for e in q.events if e.modeled is not None]
+    assert len(counted) == 2
+
+
+# ---------------------------------------------------------------------------
+# CommandGraph capture / launch
+# ---------------------------------------------------------------------------
+def test_capture_records_without_executing():
+    ctx = _ctx()
+    q = CommandQueue(ctx, profile=False)
+    a = ctx.create_buffer(jnp.ones((8, 8), jnp.float32))
+    with q.capture() as graph:
+        ev = q.enqueue_nd_range(_mm_kernel(), NDR, (a, a))
+        assert isinstance(ev.outputs[0], GraphBuffer)
+        assert ev.outputs[0].shape == (8, 8)
+        with pytest.raises(RuntimeError):
+            ev.outputs[0].read()         # no data exists during capture
+    assert len(graph.nodes) == 1
+    assert q.events == ()                # nothing ran, nothing recorded
+
+
+def test_graph_matches_eager_chain():
+    ctx = _ctx()
+    rng = np.random.default_rng(0)
+    a = jnp.asarray(rng.standard_normal((8, 8)), jnp.float32)
+    b = jnp.asarray(rng.standard_normal((8, 8)), jnp.float32)
+
+    q = CommandQueue(ctx, profile=False)
+    ab = ctx.create_buffer(a)
+    bb = ctx.create_buffer(b)
+    e1 = q.enqueue_nd_range(_mm_kernel(), NDR, (ab, bb))
+    e2 = q.enqueue_nd_range(_mm_kernel(), NDR, e1.outputs + (bb,))
+    (eager,) = e2.wait()
+
+    q2 = CommandQueue(ctx, profile=False)
+    with q2.capture() as graph:
+        c1 = q2.enqueue_nd_range(_mm_kernel(), NDR,
+                                 (ctx.create_buffer(a), ctx.create_buffer(b)))
+        q2.enqueue_nd_range(_mm_kernel(), NDR,
+                            c1.outputs + (ctx.create_buffer(b),))
+    (fused,) = graph.launch()
+    np.testing.assert_allclose(np.asarray(fused.data),
+                               np.asarray(eager.data), atol=1e-5)
+
+
+def test_graph_relaunch_with_new_inputs():
+    ctx = _ctx()
+    q = CommandQueue(ctx, profile=False)
+    a = ctx.create_buffer(jnp.ones((8, 8), jnp.float32))
+    b = ctx.create_buffer(jnp.eye(8, dtype=jnp.float32))
+    with q.capture() as graph:
+        q.enqueue_nd_range(_mm_kernel(), NDR, (a, b))
+    assert graph.n_external == 2
+    x = jnp.full((8, 8), 2.0, jnp.float32)
+    (out,) = graph.launch(x, x)
+    np.testing.assert_allclose(np.asarray(out.data),
+                               np.asarray(x @ x), atol=1e-5)
+    with pytest.raises(ValueError):
+        graph.launch(x)                  # arity mismatch
+    with pytest.raises(ValueError):
+        # shape mismatch must be loud: a silent retrace would attach
+        # capture-time modeled costs to a different-sized computation
+        graph.launch(jnp.ones((16, 16), jnp.float32), x)
+    with pytest.raises(ValueError):
+        graph.launch(x.astype(jnp.int32), x)     # dtype mismatch
+    # a buffer enqueued twice is ONE external slot (dedup by identity)
+    q2 = CommandQueue(ctx, profile=False)
+    with q2.capture() as g2:
+        q2.enqueue_nd_range(_mm_kernel(), NDR, (a, a))
+    assert g2.n_external == 1
+    (out2,) = g2.launch(x)
+    np.testing.assert_allclose(np.asarray(out2.data),
+                               np.asarray(x @ x), atol=1e-5)
+
+
+def test_graph_launch_registers_queue_events():
+    ctx = _ctx()
+    q = CommandQueue(ctx)                # profiled
+    a = ctx.create_buffer(jnp.ones(64, jnp.float32))
+    counts = lambda **kw: WorkCounts(ops=64, dcache_bytes=256, host_bytes=256,
+                                     working_set=256)
+    kern = Kernel(name="twice", executor=lambda x: x * 2, counts=counts)
+    with q.capture() as graph:
+        ev = q.enqueue_nd_range(kern, NDR, (a,))
+        q.enqueue_nd_range(kern, NDR, ev.outputs, _resident=True)
+    graph.launch()
+    q.finish()
+    assert len(q.events) == 2
+    assert q.total_modeled_s() > 0.0
+    # capture costed the resident stage: no host<->D$ transfer modeled
+    assert q.events[1].modeled.transfer == 0.0
+    assert q.events[0].modeled.transfer > 0.0
+
+
+def test_graph_donation_does_not_corrupt_visible_buffers():
+    ctx = _ctx()
+    q = CommandQueue(ctx, profile=False)
+    rng = np.random.default_rng(1)
+    a = jnp.asarray(rng.standard_normal((8, 8)), jnp.float32)
+    b = jnp.asarray(rng.standard_normal((8, 8)), jnp.float32)
+    with q.capture() as graph:
+        ab, bb = ctx.create_buffer(a), ctx.create_buffer(b)
+        ev = q.enqueue_nd_range(_mm_kernel(), NDR, (ab, bb))
+        q.enqueue_nd_range(_mm_kernel(), NDR, ev.outputs + (bb,))
+    expect = np.asarray((a @ b) @ b)
+
+    scratch = jnp.array(a)               # donated: consumed by the launch
+    (out,) = graph.launch(scratch, b, donate=(0,))
+    np.testing.assert_allclose(np.asarray(out.data), expect, atol=1e-4)
+    # the NON-donated input must stay intact and reusable
+    np.testing.assert_array_equal(np.asarray(b), np.asarray(
+        jnp.asarray(b)))
+    (out2,) = graph.launch(jnp.array(a), b)
+    np.testing.assert_allclose(np.asarray(out2.data), expect, atol=1e-4)
+    # donating the graph's own captured arrays would poison later
+    # zero-argument launches — must be rejected up front
+    with pytest.raises(ValueError):
+        graph.launch(donate=(0,))
+    (out3,) = graph.launch()             # captured externals still valid
+    np.testing.assert_allclose(np.asarray(out3.data), expect, atol=1e-4)
+
+
+def test_capture_aborted_by_exception_is_not_launchable():
+    ctx = _ctx()
+    q = CommandQueue(ctx, profile=False)
+    a = ctx.create_buffer(jnp.ones((8, 8), jnp.float32))
+    with pytest.raises(KeyError):
+        with q.capture() as graph:
+            q.enqueue_nd_range(_mm_kernel(), NDR, (a, a))
+            raise KeyError("boom mid-capture")
+    assert q._capture is None            # queue usable again
+    with pytest.raises(RuntimeError):
+        graph.launch()                   # truncated chain must not run
+    # a fresh capture on the same queue works
+    with q.capture() as g2:
+        q.enqueue_nd_range(_mm_kernel(), NDR, (a, a))
+    assert len(g2.launch()) == 1
+
+
+def test_offload_graph_without_counts_still_returns_outputs():
+    """Kernels with no machine model must not break the default graph
+    mode — outputs come back; only the cost report is empty."""
+    apu = APU(EGPU_16T)
+    x = jnp.ones((8, 8), jnp.float32)
+    stage = Stage(Kernel(name="mm_nocounts", executor=gemm_ref))
+    outs, report = apu.offload([stage], (x, x))
+    np.testing.assert_allclose(np.asarray(outs[0].data),
+                               np.asarray(x @ x), atol=1e-5)
+    assert report.egpu_fused is None and report.fused_speedup is None
+    assert report.overall_speedup is None
+    assert report.overall_energy_reduction is None
+    outs_e, _ = apu.offload([stage], (x, x), mode="eager")
+    np.testing.assert_allclose(np.asarray(outs[0].data),
+                               np.asarray(outs_e[0].data))
+
+
+def test_fuse_breakdowns_pays_dispatch_once():
+    pb = PhaseBreakdown(startup=100.0, scheduling=200.0, transfer=50.0,
+                        compute=1000.0, freq_hz=300e6)
+    fused = fuse_breakdowns([pb, pb, pb])
+    assert fused.startup == 100.0 and fused.scheduling == 200.0
+    assert fused.transfer == 150.0 and fused.compute == 3000.0
+    assert fused.total_cycles < 3 * pb.total_cycles
+    with pytest.raises(ValueError):
+        fuse_breakdowns([])
+    with pytest.raises(ValueError):
+        fuse_breakdowns([pb, dataclasses.replace(pb, freq_hz=1e6)])
+
+
+# ---------------------------------------------------------------------------
+# Full TinyBio pipeline: graph == eager, accounting preserved
+# ---------------------------------------------------------------------------
+def test_tinybio_graph_equals_eager():
+    d_graph, r_graph = run_tinybio(EGPU_16T, mode="graph")
+    d_eager, r_eager = run_tinybio(EGPU_16T, mode="eager")
+    np.testing.assert_allclose(np.asarray(d_graph), np.asarray(d_eager),
+                               atol=1e-5)
+    assert len(r_graph.stages) == len(r_eager.stages) == 4
+    for sg, se in zip(r_graph.stages, r_eager.stages):
+        # identical per-stage machine-model numbers (costed from the
+        # captured schedule, not wall clock)
+        assert sg.egpu.total_s == se.egpu.total_s
+        assert sg.host.total_s == se.host.total_s
+        assert sg.egpu_energy_j == se.egpu_energy_j
+        assert sg.host_energy_j == se.host_energy_j
+    # the fused chain amortizes startup+scheduling → strictly faster than
+    # the per-kernel sum
+    assert r_graph.egpu_fused is not None
+    assert r_graph.fused_speedup > r_graph.overall_speedup
+
+
+def test_tinybio_graph_relaunch_consistent():
+    apu = APU(EGPU_16T)
+    stages, inputs = tinybio_stages(EGPU_16T)
+    graph = apu.capture_pipeline(stages, inputs)
+    (o1,) = graph.launch(queue_events=False)
+    (o2,) = graph.launch(queue_events=False)
+    np.testing.assert_allclose(np.asarray(o1.data), np.asarray(o2.data))
