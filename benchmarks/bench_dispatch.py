@@ -16,17 +16,19 @@ compute is negligible and overhead dominates:
 
 All modes are timed over the full queue drain (events are waited *inside*
 the timed region — waiting only the last enqueue under-counts an async
-queue).  Results go to ``BENCH_dispatch.json`` next to the repo root as the
-seed of the perf trajectory.  The reference (jnp) GeMM executor is used so
-the numbers isolate host dispatch, not Pallas-interpret compute.
+queue).  Results are *appended* to ``BENCH_dispatch.json`` next to the repo
+root — a timestamped list-of-runs trajectory (a legacy single-object file is
+migrated on first write).  The reference (jnp) GeMM executor is used so the
+numbers isolate host dispatch, not Pallas-interpret compute.
 """
 
-import json
 import pathlib
 import time
 
 import jax.numpy as jnp
 import numpy as np
+
+from .history import append_entry
 
 from repro.core import (EGPU_16T, CommandQueue, Context, Device, Kernel,
                         NDRange)
@@ -121,8 +123,8 @@ def run():
         "per_launch_us": {m: p * 1e6 for m, p in per_launch.items()},
         "graph_vs_eager_sync_speedup": ratio,
     }
-    OUT_PATH.write_text(json.dumps(result, indent=2) + "\n")
-    print(f"  wrote {OUT_PATH.name}")
+    history = append_entry(OUT_PATH, result)
+    print(f"  appended to {OUT_PATH.name} (run #{len(history)})")
     return result
 
 

@@ -1,0 +1,97 @@
+"""Serving-path throughput: cached CommandGraphs vs per-call re-capture.
+
+ISSUE 2's tentpole claim is that the ``repro.serve.GraphCache`` turns the
+steady-state offload path into a pure replay: without it every
+``APU.offload(mode="graph")`` re-captures the chain and re-jits the fused
+computation; with it the same call is a dictionary lookup + ``launch``.
+This bench measures both on a chain of small dependent GeMMs (dispatch-bound
+on purpose, like ``bench_dispatch``) and reports the per-offload speedup —
+CI gates conservatively at >= 2x (dev hosts measure far higher; the slack
+absorbs shared-runner noise).
+
+Results are appended to ``BENCH_serve.json`` (timestamped list-of-runs, same
+trajectory format as ``BENCH_dispatch.json``).
+"""
+
+import pathlib
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import APU, EGPU_16T, Kernel, Stage
+from repro.kernels.gemm.ref import gemm_ref
+from repro.serve import GraphCache
+
+from .history import append_entry
+
+SIZE = 32
+CHAIN = 6          # dependent GeMM stages per offload
+REPS = 12          # offloads per trial
+TRIALS = 3         # best-of (min)
+OUT_PATH = pathlib.Path(__file__).resolve().parent.parent / "BENCH_serve.json"
+
+
+def _stages():
+    kern = Kernel(name="gemm_chain", executor=gemm_ref)
+    w = jnp.asarray(np.eye(SIZE, dtype=np.float32)
+                    + 0.01 * np.random.default_rng(0).standard_normal(
+                        (SIZE, SIZE)).astype(np.float32))
+    return [Stage(kern, consts=(w,), n_inputs=1) for _ in range(CHAIN)]
+
+
+def _bench_offload(apu, stages, x):
+    def one():
+        outs, _ = apu.offload(stages, (x,))
+        outs[0].data.block_until_ready()
+
+    one()                                 # compile / first capture
+    best = float("inf")
+    for _ in range(TRIALS):
+        t0 = time.perf_counter()
+        for _ in range(REPS):
+            one()
+        best = min(best, time.perf_counter() - t0)
+    return best / REPS
+
+
+def run():
+    print("=" * 76)
+    print("Serving path: cached CommandGraph vs per-offload re-capture")
+    print(f"(chain of {CHAIN} dependent {SIZE}x{SIZE} GeMM stages, best of "
+          f"{TRIALS}x{REPS} offloads)")
+    print("=" * 76)
+    stages = _stages()
+    x = jnp.asarray(np.random.default_rng(1).standard_normal(
+        (SIZE, SIZE)).astype(np.float32))
+
+    recapture = _bench_offload(APU(EGPU_16T), stages, x)
+    cache = GraphCache(capacity=8)
+    cached = _bench_offload(APU(EGPU_16T, graph_cache=cache), stages, x)
+
+    ratio = recapture / cached
+    print(f"  re-capture  {recapture * 1e6:9.1f} us/offload")
+    print(f"  cached      {cached * 1e6:9.1f} us/offload   "
+          f"(cache: {cache.hits} hits / {cache.misses} miss)")
+    print(f"\n  cached offload is {ratio:.1f}x faster than re-capture "
+          f"(>= 2x CI gate)")
+    assert cache.misses == 1, "steady-state offloads must never re-capture"
+
+    result = {
+        "bench": "serve",
+        "size": SIZE,
+        "chain_len": CHAIN,
+        "reps": REPS,
+        "trials": TRIALS,
+        "per_offload_us": {"recapture": recapture * 1e6,
+                           "cached": cached * 1e6},
+        "cached_vs_recapture_speedup": ratio,
+        "cache_stats": cache.stats(),
+    }
+    history = append_entry(OUT_PATH, result)
+    print(f"  appended to {OUT_PATH.name} (run #{len(history)})")
+    return result
+
+
+if __name__ == "__main__":
+    run()

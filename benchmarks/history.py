@@ -1,0 +1,38 @@
+"""Append-only benchmark trajectories (ROADMAP: BENCH_*.json are the seed of
+the perf trajectory — runs must append comparable numbers, never silently
+overwrite).
+
+Format: a JSON *list* of run entries, oldest first; every entry carries a
+``timestamp`` (UTC ISO-8601).  :func:`append_entry` migrates a legacy
+single-object file (the PR-1 format) into ``[legacy, new]`` on first write.
+"""
+
+import datetime
+import json
+import pathlib
+from typing import Any, Dict, List
+
+
+def load_history(path: pathlib.Path) -> List[Dict[str, Any]]:
+    """Existing runs at ``path`` (a legacy single dict becomes a 1-list)."""
+    if not path.exists():
+        return []
+    data = json.loads(path.read_text())
+    if isinstance(data, dict):       # pre-trajectory format: one bare run
+        return [data]
+    return list(data)
+
+
+def append_entry(path: pathlib.Path, entry: Dict[str, Any]
+                 ) -> List[Dict[str, Any]]:
+    """Stamp ``entry`` and append it to the trajectory at ``path``.
+
+    Returns the full history (the new entry last) after writing.
+    """
+    history = load_history(path)
+    stamped = dict(entry)
+    stamped.setdefault("timestamp", datetime.datetime.now(
+        datetime.timezone.utc).isoformat(timespec="seconds"))
+    history.append(stamped)
+    path.write_text(json.dumps(history, indent=2) + "\n")
+    return history

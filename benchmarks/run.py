@@ -1,6 +1,6 @@
 """Benchmark orchestrator: one bench per paper table/figure + roofline.
 
-    PYTHONPATH=src python -m benchmarks.run [--only static|gemm|tinybio|dispatch|roofline]
+    PYTHONPATH=src python -m benchmarks.run [--only static|gemm|tinybio|dispatch|serve|roofline]
 """
 
 import argparse
@@ -8,13 +8,14 @@ import sys
 import time
 
 from . import (bench_dispatch, bench_gemm_overhead, bench_roofline,
-               bench_static, bench_tinybio)
+               bench_serve, bench_static, bench_tinybio)
 
 BENCHES = {
     "static": bench_static.run,        # paper Fig 2
     "gemm": bench_gemm_overhead.run,   # paper Fig 3
     "tinybio": bench_tinybio.run,      # paper Fig 4
     "dispatch": bench_dispatch.run,    # §VIII-B measured analogue
+    "serve": bench_serve.run,          # ISSUE-2 cached-graph serving path
     "roofline": bench_roofline.run,    # EXPERIMENTS §Roofline table
 }
 

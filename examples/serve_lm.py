@@ -1,41 +1,113 @@
-"""Serving example: batched prefill + greedy decode with per-family caches.
+"""Serving example: a synthetic LM-scoring request stream through
+``repro.serve.Server`` — batched offload on cached CommandGraphs across two
+e-GPU queues, ending in a :class:`ServeReport` printout.
 
-Loads three reduced archs — a GQA transformer (qwen), the MLA+MoE family
-(deepseek, compressed latent cache) and the attention-free rwkv6 (O(1)
-state) — and generates continuations for a batch of prompts, demonstrating
-that one serving API covers every cache kind in the zoo.
+The pipeline is a per-request token scorer built from the e-GPU kernel zoo
+(embedding gather -> GeMM+ReLU -> logits GeMM); requests are token-id
+sequences of ragged length, padded to shape buckets and coalesced into
+micro-batches.  The example doubles as a living integration test: it
+asserts that
+
+* the warm server performs ZERO re-captures (every launch after the first
+  per bucket x worker is a GraphCache hit), and
+* every batched result is bit-identical to a per-request eager
+  ``APU.offload``.
 
 Run:  PYTHONPATH=src python examples/serve_lm.py
 """
 
-import dataclasses
-
-import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.configs import ARCHS
-from repro.models import init_params, model_spec
-from repro.train.serve import greedy_generate
+from repro.core import APU, EGPU_8T, EGPU_16T, Kernel, Stage
+from repro.kernels.gemm.ref import counts as gemm_counts
+from repro.kernels.gemm.ref import gemm_ref
+from repro.serve import Server
 
-BATCH, PROMPT, NEW = 4, 24, 8
+VOCAB, D, HIDDEN = 128, 32, 48
+BUCKETS = (16, 32, 64)
+MAX_BATCH = 4
+N_REQUESTS = 48
 
-for arch in ("qwen2.5-3b", "deepseek-v2-236b", "rwkv6-3b"):
-    cfg = ARCHS[arch].reduced()
-    if cfg.n_experts:
-        cfg = dataclasses.replace(cfg, capacity_factor=4.0)
-    params = init_params(model_spec(cfg), jax.random.PRNGKey(0))
-    prompts = jnp.asarray(
-        np.random.default_rng(1).integers(0, cfg.vocab, (BATCH, PROMPT)),
-        jnp.int32)
-    out = greedy_generate(params, cfg, prompts, max_new=NEW,
-                          max_len=PROMPT + NEW + 1)
-    assert out.shape == (BATCH, NEW)
-    assert bool(jnp.all((out >= 0) & (out < cfg.vocab_padded)))
-    kinds = {"qwen2.5-3b": "KV cache", "deepseek-v2-236b":
-             "MLA latent cache (576/token vs 32768 dense)",
-             "rwkv6-3b": "O(1) recurrent state"}
-    print(f"{arch:22s} -> generated {out.shape} via {kinds[arch]}")
-    print(f"{'':22s}    first row: {np.asarray(out[0]).tolist()}")
 
-print("\nserve_lm OK — one decode API, three cache families")
+def lm_stages(seed: int = 0):
+    """Per-request LM scorer: ids (s,) -> logits (s, VOCAB)."""
+    rng = np.random.default_rng(seed)
+    emb = jnp.asarray(rng.standard_normal((VOCAB, D)) * 0.1, jnp.float32)
+    w1 = jnp.asarray(rng.standard_normal((D, HIDDEN)) * 0.1, jnp.float32)
+    w2 = jnp.asarray(rng.standard_normal((HIDDEN, VOCAB)) * 0.1, jnp.float32)
+
+    def embed(ids, table):
+        return table[ids]
+
+    def ffn(x, w):
+        return jnp.maximum(gemm_ref(x, w), 0.0)
+
+    def logits(x, w):
+        return gemm_ref(x, w)
+
+    s = BUCKETS[-1]   # counts at the largest bucket (upper-bound model)
+    return [
+        Stage(Kernel("embed", executor=embed,
+                     counts=lambda **kw: gemm_counts(m=s, n=D, k=1)),
+              consts=(emb,)),
+        Stage(Kernel("ffn", executor=ffn,
+                     counts=lambda **kw: gemm_counts(m=s, n=HIDDEN, k=D)),
+              consts=(w1,)),
+        Stage(Kernel("logits", executor=logits,
+                     counts=lambda **kw: gemm_counts(m=s, n=VOCAB, k=HIDDEN)),
+              consts=(w2,)),
+    ]
+
+
+def request_stream(n: int, seed: int = 1):
+    rng = np.random.default_rng(seed)
+    for _ in range(n):
+        length = int(rng.integers(4, BUCKETS[-1] + 1))
+        yield jnp.asarray(rng.integers(0, VOCAB, (length,)), jnp.int32)
+
+
+def main():
+    stages = lm_stages()
+    server = Server(stages, workers=(EGPU_16T, EGPU_8T),
+                    bucket_sizes=BUCKETS, max_batch=MAX_BATCH,
+                    max_in_flight=2)
+
+    # -- warm-up: pre-capture every (bucket, worker) graph ------------------
+    captured = server.warmup(jnp.zeros((1,), jnp.int32))
+    assert captured == len(BUCKETS) * 2    # 3 buckets x 2 queues
+    warm = [(server.submit(ids), ids) for ids in request_stream(N_REQUESTS)]
+    server.flush()
+
+    # -- steady state: warm server => ZERO re-captures ----------------------
+    assert server.cache.misses == captured, "warm-up missed a combination"
+    steady = [(server.submit(ids), ids)
+              for ids in request_stream(N_REQUESTS, seed=2)]
+    server.flush()
+    assert server.cache.misses == captured, (
+        "warm server re-captured a graph: "
+        f"{server.cache.misses} != {captured}")
+
+    # -- batched == per-request eager offload, bit for bit ------------------
+    apu = APU(EGPU_16T)
+    for rid, ids in (warm + steady)[:: N_REQUESTS // 6]:
+        (got,) = server.result(rid)
+        ref_outs, _ = apu.offload(stages, (ids,), mode="eager")
+        assert got.shape == (ids.shape[0], VOCAB)
+        assert np.array_equal(np.asarray(got),
+                              np.asarray(ref_outs[0].data)), (
+            f"request {rid}: batched result diverged from eager offload")
+
+    report = server.report()
+    print("=" * 72)
+    print(f"serve_lm: {report.n_requests} LM-scoring requests, "
+          f"{len(BUCKETS)} shape buckets, 2 e-GPU queues")
+    print("=" * 72)
+    print(report.summary())
+    print("\nserve_lm OK — warm cache re-captured nothing; batched results "
+          "bit-identical to eager offload")
+    return report
+
+
+if __name__ == "__main__":
+    main()

@@ -29,7 +29,7 @@ from typing import Any, Dict, List, Optional, Sequence, Tuple
 import jax
 
 from .device import EGPUConfig, EGPU_16T, HOST
-from .machine import PhaseBreakdown, fuse_breakdowns
+from .machine import PhaseBreakdown
 from .ndrange import NDRange
 from .runtime import Buffer, CommandGraph, CommandQueue, Context, Device, Kernel
 from .scheduler import optimal_ndrange
@@ -106,13 +106,23 @@ class PipelineReport:
 
 
 class APU:
-    """An accelerated processing unit: X-HEEP host + one e-GPU instance."""
+    """An accelerated processing unit: X-HEEP host + one e-GPU instance.
 
-    def __init__(self, config: EGPUConfig = EGPU_16T):
+    ``graph_cache`` (a :class:`repro.serve.GraphCache`, or anything with its
+    ``get_or_capture(apu, stages, inputs, ndranges)`` contract) memoizes
+    compiled :class:`CommandGraph`\\ s across :meth:`offload` calls: a warm
+    cache makes repeated same-shape offloads skip both re-capture and re-jit
+    (the ISSUE-2 serving substrate).  Without one, every graph-mode offload
+    re-captures — the pre-serving behaviour.
+    """
+
+    def __init__(self, config: EGPUConfig = EGPU_16T,
+                 graph_cache: Optional[Any] = None):
         self.egpu = Device(config)
         self.host = Device(HOST)
         self.egpu_ctx = Context(self.egpu)
         self.host_ctx = Context(self.host)
+        self.graph_cache = graph_cache
 
     # -- shared stage wiring -----------------------------------------------
     def wire_pipeline(self, q: CommandQueue, stages: Sequence["Stage"],
@@ -128,7 +138,8 @@ class APU:
         per-stage events).
         """
         ctx = q.ctx
-        bufs = tuple(ctx.create_buffer(x) for x in inputs)
+        bufs = tuple(x if isinstance(x, Buffer) else ctx.create_buffer(x)
+                     for x in inputs)
         evs = []
         for i, stage in enumerate(stages):
             ndr = (ndranges[i] if ndranges is not None
@@ -186,30 +197,57 @@ class APU:
                          ) -> CommandGraph:
         """Capture the stage chain on the e-GPU queue into a reusable
         :class:`~repro.core.runtime.CommandGraph` (launch it repeatedly,
-        amortizing both jit compilation and per-kernel dispatch)."""
+        amortizing both jit compilation and per-kernel dispatch).
+
+        The pipeline inputs are pinned as the graph's *first* external slots
+        in order — even ones no stage ends up consuming — so a cached graph
+        can be re-launched on fresh request data with
+        ``graph.launch_prefix(new_inputs)`` while the per-stage constant
+        buffers keep their captured values.  ``graph.n_request_inputs``
+        records how many leading externals are pipeline inputs.
+        """
         q = CommandQueue(self.egpu_ctx)
         with q.capture() as graph:
-            self.wire_pipeline(q, stages, inputs, ndranges,
+            bufs = tuple(self.egpu_ctx.create_buffer(x) for x in inputs)
+            for b in bufs:
+                graph._slot_of(b)
+            self.wire_pipeline(q, stages, bufs, ndranges,
                                resident_chain=True)
+        graph.n_request_inputs = len(bufs)
         return graph
 
     def _offload_graph(self, stages, inputs, ndranges):
-        graph = self.capture_pipeline(stages, inputs, ndranges)
+        if self.graph_cache is not None:
+            graph, _hit = self.graph_cache.get_or_capture(
+                self, stages, inputs, ndranges)
+        else:
+            graph = self.capture_pipeline(stages, inputs, ndranges)
         q = graph.queue
-        final = graph.launch()
+        final = graph.launch_prefix(inputs)
         q.finish()
-        host = self._host_costs(stages, ndranges, graph)
-        reports = tuple(
-            StageReport(name=stage.kernel.name, egpu=node.modeled,
-                        host=h_mod, egpu_energy_j=node.energy_j,
-                        host_energy_j=h_en)
-            for stage, node, (h_mod, h_en)
-            in zip(stages, graph.nodes, host))
-        # Kernels without a counts model (or an unprofiled queue) still get
-        # their functional outputs — there is just no fused cost to report.
-        mods = [m for m in graph.modeled_breakdowns() if m is not None]
-        fused = fuse_breakdowns(mods) if mods else None
-        return final, PipelineReport(reports, egpu_fused=fused)
+        # The whole PipelineReport is launch-invariant for a given graph
+        # (host costs come from the captured schedule, not the inputs), so
+        # a GraphCache hit reuses the frozen report instead of re-walking
+        # the host machine model per offload.
+        report = getattr(graph, "_pipeline_report", None)
+        if report is None:
+            host = self._host_costs(stages, ndranges, graph)
+            reports = tuple(
+                StageReport(name=stage.kernel.name, egpu=node.modeled,
+                            host=h_mod, egpu_energy_j=node.energy_j,
+                            host_energy_j=h_en)
+                for stage, node, (h_mod, h_en)
+                in zip(stages, graph.nodes, host))
+            # Kernels without a counts model (or an unprofiled queue) still
+            # get their functional outputs — just no fused cost to report.
+            fused, _ = graph.fused_modeled()
+            report = PipelineReport(reports, egpu_fused=fused)
+            graph._pipeline_report = report
+        # A cached graph's queue lives as long as the cache entry: return it
+        # to O(1) memory now that the report is assembled (the modeled
+        # totals fold into the queue's running counters).
+        q.release_events()
+        return final, report
 
     # -- per-kernel eager path ---------------------------------------------
     def _offload_eager(self, stages, inputs, ndranges):

@@ -83,6 +83,19 @@ class PhaseBreakdown:
     def total_s(self) -> float:
         return self.total_cycles / self.freq_hz
 
+    def scaled(self, k: float) -> "PhaseBreakdown":
+        """Uniformly scale every phase by ``k`` (same frequency).
+
+        The serving layer uses ``scaled(1 / batch)`` for a request's share
+        of a batched fused launch: the batch pays startup + scheduling once,
+        and each of its ``batch`` requests owns an equal slice of the chain
+        (energy-per-request and amortized-latency accounting in
+        :class:`repro.serve.ServeReport`).
+        """
+        return dataclasses.replace(
+            self, startup=self.startup * k, scheduling=self.scheduling * k,
+            transfer=self.transfer * k, compute=self.compute * k)
+
     @property
     def transfer_fraction(self) -> float:
         return self.transfer / self.total_cycles

@@ -66,7 +66,8 @@ import jax
 import jax.numpy as jnp
 
 from .device import EGPUConfig, EGPU_16T, HOST
-from .machine import PhaseBreakdown, WorkCounts, egpu_time, host_time
+from .machine import (PhaseBreakdown, WorkCounts, egpu_time, fuse_breakdowns,
+                      host_time)
 from .ndrange import NDRange
 from .power import egpu_energy_j, host_energy_j
 
@@ -138,6 +139,13 @@ class Event:
     is asynchronous, so this excludes device compute); ``wait()`` blocks
     until the results are realized.  ``wall_s`` is kept as an alias of
     ``dispatch_s`` for older call sites.
+
+    Events are reference-counted like ``cl_event`` (clRetainEvent /
+    clReleaseEvent): :meth:`release` drops the event's hold on its output
+    buffers once the count reaches zero, so a long-lived queue can return
+    completed launches to O(in-flight) memory (see
+    :meth:`CommandQueue.release_events`).  Modeled cost metadata survives
+    release — only the (potentially large) functional outputs are dropped.
     """
 
     def __init__(self, kernel: Kernel, outputs: Tuple[Buffer, ...],
@@ -149,6 +157,7 @@ class Event:
         self.energy_j = energy_j
         self.dispatch_s = dispatch_s
         self._done = False
+        self._refcount = 1
 
     @property
     def wall_s(self) -> float:
@@ -157,6 +166,29 @@ class Event:
     @property
     def done(self) -> bool:
         return self._done
+
+    @property
+    def released(self) -> bool:
+        return self._refcount <= 0
+
+    def retain(self) -> "Event":
+        """clRetainEvent: keep output buffers alive across a queue release."""
+        if self._refcount <= 0:
+            raise RuntimeError("cannot retain a released Event")
+        self._refcount += 1
+        return self
+
+    def release(self) -> None:
+        """clReleaseEvent: drop one reference; at zero, free the outputs.
+
+        Idempotent once released.  The modeled breakdown / energy stay
+        readable (they are O(1)); only the buffer references are dropped.
+        """
+        if self._refcount <= 0:
+            return
+        self._refcount -= 1
+        if self._refcount == 0:
+            self.outputs = ()
 
     def wait(self) -> Tuple[Buffer, ...]:
         for b in self.outputs:
@@ -180,16 +212,34 @@ class CommandQueue:
     returns immediately and only ``Event.wait()`` / :meth:`finish`
     synchronize.  ``blocking=True`` restores eager-sync dispatch (one device
     round-trip per kernel) for overhead A/B comparisons.
+
+    Event lifecycle (serving workloads): an unprofiled queue auto-releases
+    its events on :meth:`finish` — nobody can need them for accounting, so
+    the queue stays O(in-flight) memory on a long-lived server.  A profiled
+    queue keeps every event by default (full Fig-3/4 history); pass
+    ``max_events=N`` for a *bounded profiling window*: only the newest N
+    drained events are retained, older ones are released with their modeled
+    time/energy folded into the queue's running totals, so
+    :meth:`total_modeled_s` / :meth:`total_energy_j` stay exact regardless
+    of the window.
     """
 
     def __init__(self, ctx: Context, profile: bool = True,
-                 blocking: bool = False):
+                 blocking: bool = False, max_events: Optional[int] = None):
+        if max_events is not None and max_events < 0:
+            raise ValueError("max_events must be None or >= 0")
         self.ctx = ctx
         self.profile = profile
         self.blocking = blocking
+        self.max_events = max_events
         self._events: List[Event] = []
         self._drained = 0              # finish() watermark: events before
                                        # this index are already waited
+        # Running totals of *released* events, so dropping an event from the
+        # retained window never changes the queue's modeled accounting.
+        self._released_count = 0
+        self._released_modeled_s = 0.0
+        self._released_energy_j = 0.0
         # Keyed on (kernel, static-arg signature): the same kernel enqueued
         # with a different static/traced split gets its own jit wrapper
         # instead of silently reusing the first call's (see ISSUE 1).
@@ -286,23 +336,74 @@ class CommandQueue:
 
         Only events enqueued since the last ``finish()`` are waited (a
         drained-watermark: repeated drains on a long-lived queue stay O(new
-        work), not O(full history))."""
+        work), not O(full history)).  On an unprofiled queue the drained
+        events are then released outright; with ``max_events`` set, the
+        retained history is trimmed to the window (oldest first)."""
         for ev in self._events[self._drained:]:
             ev.wait()
         self._drained = len(self._events)
+        if not self.profile:
+            self.release_events()
+        elif (self.max_events is not None
+              and len(self._events) > self.max_events):
+            self.release_events(upto=len(self._events) - self.max_events)
+
+    def drain(self, n: int) -> None:
+        """Wait the oldest ``n`` retained events (a *partial* clFinish).
+
+        Lets a serving layer retire one launch's event segment without
+        synchronizing launches enqueued after it — pair with
+        ``release_events(upto=n)`` to drop exactly that segment."""
+        n = min(n, len(self._events))
+        for ev in self._events[:n]:
+            ev.wait()
+        self._drained = max(self._drained, n)
+
+    def release_events(self, upto: Optional[int] = None) -> int:
+        """Release and drop the oldest ``upto`` events (clReleaseEvent sweep).
+
+        Only *drained* events are eligible — an event :meth:`finish` has not
+        waited yet may still be in flight.  Each dropped event's modeled
+        time/energy is folded into the queue's running totals first, so
+        :meth:`total_modeled_s` / :meth:`total_energy_j` are unaffected.
+        ``Event.retain()``-ed events are still dropped from the queue's
+        history, but keep their output buffers alive for the holder.
+        Returns the number of events released.
+        """
+        upto = self._drained if upto is None else min(upto, self._drained)
+        if upto <= 0:
+            return 0
+        for ev in self._events[:upto]:
+            if ev.modeled is not None:
+                self._released_modeled_s += ev.modeled.total_s
+            if ev.energy_j is not None:
+                self._released_energy_j += ev.energy_j
+            self._released_count += 1
+            ev.release()
+        del self._events[:upto]
+        self._drained -= upto
+        return upto
 
     @property
     def events(self) -> Tuple[Event, ...]:
+        """Retained (not yet released) events, oldest first."""
         return tuple(self._events)
+
+    @property
+    def released_count(self) -> int:
+        """Events released from this queue's history so far."""
+        return self._released_count
 
     def total_modeled_s(self) -> float:
         # `is not None`, not truthiness: an all-zero PhaseBreakdown (e.g. a
-        # fully resident stage) must still be counted.
-        return sum(e.modeled.total_s for e in self._events
-                   if e.modeled is not None)
+        # fully resident stage) must still be counted.  Released events are
+        # accounted via the running totals.
+        return self._released_modeled_s + sum(
+            e.modeled.total_s for e in self._events if e.modeled is not None)
 
     def total_energy_j(self) -> float:
-        return sum(e.energy_j for e in self._events if e.energy_j is not None)
+        return self._released_energy_j + sum(
+            e.energy_j for e in self._events if e.energy_j is not None)
 
 
 @dataclasses.dataclass
@@ -347,6 +448,7 @@ class CommandGraph:
         self._bufs_alive: List[Buffer] = []    # keep ids stable during capture
         self._jit_cache: Dict[Tuple[Any, ...], Callable] = {}
         self._sealed = False
+        self._fused_memo: Optional[Tuple[Optional[PhaseBreakdown], float]] = None
 
     # -- capture ------------------------------------------------------------
     def __enter__(self) -> "CommandGraph":
@@ -411,6 +513,11 @@ class CommandGraph:
     def n_external(self) -> int:
         return len(self._ext_slots)
 
+    @property
+    def ext_avals(self) -> Tuple[jax.ShapeDtypeStruct, ...]:
+        """Shape/dtype of each external input, in capture order."""
+        return tuple(self._ext_avals)
+
     def modeled_breakdowns(self) -> Tuple[Optional[PhaseBreakdown], ...]:
         return tuple(n.modeled for n in self.nodes)
 
@@ -420,6 +527,20 @@ class CommandGraph:
 
     def total_energy_j(self) -> float:
         return sum(n.energy_j for n in self.nodes if n.energy_j is not None)
+
+    def fused_modeled(self) -> Tuple[Optional[PhaseBreakdown], float]:
+        """(fused breakdown, total energy) of the captured chain, memoized.
+
+        Both come from capture time and never change across launches — the
+        serving hot path reads them once per launch, so re-walking the node
+        list every time would be pure waste.  The breakdown is ``None`` when
+        no node carries a machine model.
+        """
+        if self._fused_memo is None:
+            mods = [m for m in self.modeled_breakdowns() if m is not None]
+            self._fused_memo = (fuse_breakdowns(mods) if mods else None,
+                                self.total_energy_j())
+        return self._fused_memo
 
     # -- launch -------------------------------------------------------------
     def _fused(self, donate: Tuple[int, ...]) -> Callable:
@@ -507,6 +628,33 @@ class CommandGraph:
                     node.kernel, node_outs, node.modeled, node.energy_j,
                     per_node))
         return outs
+
+    def launch_prefix(self, inputs: Sequence[Any],
+                      **launch_kwargs: Any) -> Tuple[Buffer, ...]:
+        """Launch with only the first ``len(inputs)`` externals replaced.
+
+        The remaining externals keep the arrays captured at record time —
+        for a pipeline graph these are the per-stage constant buffers
+        (weights, coefficients), so a serving layer can feed fresh request
+        data without re-threading the pipeline's parameters (this is the
+        entry point ``repro.serve.GraphCache`` launches through).
+        """
+        inputs = list(inputs)
+        if len(inputs) > len(self._ext_values):
+            raise ValueError(
+                f"launch_prefix got {len(inputs)} inputs but the graph has "
+                f"only {len(self._ext_values)} externals")
+        donate = launch_kwargs.get("donate", ())
+        if any(int(i) >= len(inputs) for i in donate):
+            # Positions beyond the replaced prefix are filled from the
+            # graph's own captured arrays — donating one would consume a
+            # buffer every later launch still needs (same hazard the
+            # donate-without-inputs guard in launch() exists for).
+            raise ValueError(
+                "launch_prefix can only donate caller-supplied positions "
+                f"(< {len(inputs)}); the rest are captured externals")
+        return self.launch(*inputs, *self._ext_values[len(inputs):],
+                           **launch_kwargs)
 
 
 class Device:

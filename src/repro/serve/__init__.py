@@ -1,0 +1,31 @@
+"""repro.serve — the APU serving subsystem (ISSUE 2).
+
+Turns the one-shot ``APU.offload`` pipeline into a long-lived serving
+engine:
+
+* :class:`GraphCache` — memoized compiled :class:`CommandGraph`\\ s across
+  offloads (LRU, hit/miss/eviction counters);
+* :class:`BucketBatcher` — shape-bucketed dynamic batching (pad-to-bucket,
+  coalesce, crop back);
+* :class:`MultiQueueDispatcher` / :class:`QueueWorker` — load-balanced
+  multi-queue dispatch with in-flight-depth backpressure and per-queue
+  machine-model accounting;
+* :class:`Server` / :class:`ServeReport` — the front-end tying them
+  together: submit -> batch -> cached fused launch -> per-request results +
+  requests/s, modeled latency percentiles and energy per request.
+"""
+
+from .batching import (BucketBatcher, MicroBatch, ServeRequest,
+                       batched_stages, pad_to)
+from .cache import (GraphCache, input_signature, stage_signature,
+                    stages_signature)
+from .dispatch import (LaunchTicket, MultiQueueDispatcher, QueueStats,
+                       QueueWorker)
+from .server import PERCENTILES, Server, ServeReport
+
+__all__ = [
+    "BucketBatcher", "MicroBatch", "ServeRequest", "batched_stages", "pad_to",
+    "GraphCache", "input_signature", "stage_signature", "stages_signature",
+    "LaunchTicket", "MultiQueueDispatcher", "QueueStats", "QueueWorker",
+    "PERCENTILES", "Server", "ServeReport",
+]

@@ -1,0 +1,290 @@
+"""Dynamic batching — bucket-by-shape, pad-to-bucket, coalesce, crop back.
+
+Serving traffic arrives one request at a time with ragged sizes; the e-GPU
+only amortizes Tiny-OpenCL startup + scheduling when work is chained and
+batched (paper §IV-B / §VIII-B).  The batcher closes the gap:
+
+1. each request's arrays are padded along ``pad_axis`` up to the smallest
+   configured *bucket* length that fits (so a handful of shape classes cover
+   arbitrary traffic);
+2. requests sharing a bucket accumulate until ``max_batch`` (or an explicit
+   flush) and are stacked on a new leading batch axis — the batch dimension
+   is itself padded to ``max_batch`` so every launch of a bucket has
+   *identical* shapes and hits one :class:`~repro.serve.cache.GraphCache`
+   entry;
+3. :func:`batched_stages` lifts the pipeline's per-request kernels over the
+   batch axis with ``jax.vmap`` (constants broadcast, work counts scaled by
+   the batch size so the machine model stays honest);
+4. after launch, :meth:`MicroBatch.crop` slices each request's true extent
+   back out.
+
+Correctness contract: pipeline kernels must be *pad-stable* — zero-padding a
+request along ``pad_axis`` must not change the outputs at the request's
+valid indices (true for row-independent kernels: elementwise ops, per-row
+GeMM, gather/embedding, causal FIR).  Kernels that reduce over the padded
+axis (global softmax, whole-signal statistics) need an explicit mask stage
+or exact-fit buckets (``bucket_sizes`` containing every admissible length).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import math
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..core.apu import Stage
+from ..core.machine import WorkCounts
+from ..core.runtime import Kernel
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeRequest:
+    """One in-flight request: payload arrays + bookkeeping."""
+
+    rid: int
+    arrays: Tuple[jax.Array, ...]
+    t_submit: float
+    #: true (un-padded) extent of each array along the batcher's pad axis
+    lengths: Tuple[int, ...] = ()
+
+
+@dataclasses.dataclass
+class MicroBatch:
+    """A coalesced launch unit: ``inputs`` are the stacked padded arrays
+    (leading axis == ``capacity``, the bucket's max batch), ``requests``
+    the live entries occupying its first rows."""
+
+    bucket_key: Tuple[Any, ...]
+    inputs: Tuple[jax.Array, ...]
+    requests: Tuple[ServeRequest, ...]
+    capacity: int
+    pad_axis: int = 0
+    crop_outputs: bool = True
+
+    @property
+    def n_requests(self) -> int:
+        return len(self.requests)
+
+    def crop(self, outputs: Sequence[Any]) -> List[Tuple[jax.Array, ...]]:
+        """Slice each live request's true extent out of the batched outputs.
+
+        Every output is expected to carry the batch on axis 0; the request's
+        ``pad_axis`` (an axis of the *un-batched* row, so axis ``pad_axis``
+        of ``row = out[i]``) is cropped back to the first input's true
+        length when the output kept the padded extent, else returned whole
+        (reduced outputs).
+
+        Caveat: "kept the padded extent" is detected by shape — an output
+        dimension that *coincidentally* equals the bucket size (a fixed
+        64-bin histogram served with a 64-bucket, say) would be wrongly
+        cropped.  Pipelines with such outputs must set
+        ``crop_outputs=False`` on the batcher/server and slice results
+        themselves using ``ServeRequest.lengths``.
+        """
+        if not self.crop_outputs:
+            return [tuple((o.data if hasattr(o, "data") else o)[i]
+                          for o in outputs)
+                    for i in range(len(self.requests))]
+        ax = self.pad_axis
+        padded_len = (self.inputs[0].shape[ax + 1]
+                      if self.inputs and self.inputs[0].ndim > ax + 1
+                      else None)
+        per_request: List[Tuple[jax.Array, ...]] = []
+        for i, req in enumerate(self.requests):
+            rows = []
+            for out in outputs:
+                arr = out.data if hasattr(out, "data") else out
+                row = arr[i]
+                if (row.ndim > ax and req.lengths and padded_len is not None
+                        and row.shape[ax] == padded_len
+                        and row.shape[ax] >= req.lengths[0]):
+                    sl = [slice(None)] * row.ndim
+                    sl[ax] = slice(0, req.lengths[0])
+                    row = row[tuple(sl)]
+                rows.append(row)
+            per_request.append(tuple(rows))
+        return per_request
+
+
+def pad_to(arr: jax.Array, size: int, axis: int = 0,
+           fill: float | int = 0) -> jax.Array:
+    """Pad ``arr`` along ``axis`` up to ``size`` with ``fill``."""
+    cur = arr.shape[axis]
+    if cur == size:
+        return arr
+    if cur > size:
+        raise ValueError(f"array extent {cur} exceeds bucket size {size}")
+    pads = [(0, 0)] * arr.ndim
+    pads[axis] = (0, size - cur)
+    return jnp.pad(arr, pads, constant_values=fill)
+
+
+class BucketBatcher:
+    """Accumulate requests into shape buckets; emit full micro-batches.
+
+    ``bucket_sizes`` are the admissible padded lengths (ascending); a request
+    lands in the smallest bucket covering its ``pad_axis`` extent.  ``add``
+    returns a :class:`MicroBatch` when a bucket fills to ``max_batch``;
+    ``drain()`` flushes every partial bucket (batch-dim padded to
+    ``max_batch`` so shapes — and hence cached graphs — never vary).
+    """
+
+    def __init__(self, bucket_sizes: Sequence[int], max_batch: int = 8,
+                 pad_axis: int = 0, fill: float | int = 0,
+                 crop_outputs: bool = True):
+        if not bucket_sizes:
+            raise ValueError("need at least one bucket size")
+        if any(b <= 0 for b in bucket_sizes):
+            raise ValueError("bucket sizes must be positive")
+        if max_batch < 1:
+            raise ValueError("max_batch must be >= 1")
+        self.bucket_sizes = tuple(sorted(set(int(b) for b in bucket_sizes)))
+        self.max_batch = max_batch
+        self.pad_axis = pad_axis
+        self.fill = fill
+        self.crop_outputs = crop_outputs
+        self._pending: Dict[Tuple[Any, ...], List[ServeRequest]] = {}
+        self._rid = itertools.count()
+        # counters (surfaced in ServeReport)
+        self.n_submitted = 0
+        self.n_batches = 0
+        self.padded_elements = 0   # request elements added purely by padding
+
+    # -- bucketing ----------------------------------------------------------
+    def bucket_size_for(self, length: int) -> int:
+        for b in self.bucket_sizes:
+            if length <= b:
+                return b
+        raise ValueError(
+            f"request length {length} exceeds largest bucket "
+            f"{self.bucket_sizes[-1]}")
+
+    def bucket_key_for(self, arrays: Sequence[jax.Array]) -> Tuple[Any, ...]:
+        """Padded (shape, dtype) per array — the bucket identity."""
+        key = []
+        for a in arrays:
+            if a.ndim <= self.pad_axis:    # nothing to pad: exact-shape key
+                key.append((tuple(a.shape), str(a.dtype)))
+                continue
+            shape = list(a.shape)
+            shape[self.pad_axis] = self.bucket_size_for(shape[self.pad_axis])
+            key.append((tuple(shape), str(a.dtype)))
+        return tuple(key)
+
+    # -- request intake -----------------------------------------------------
+    def submit(self, *arrays: Any, t_submit: float = 0.0) -> ServeRequest:
+        """Wrap ``arrays`` into a request and stage it in its bucket."""
+        arrs = tuple(jnp.asarray(a) for a in arrays)
+        req = ServeRequest(rid=next(self._rid), arrays=arrs,
+                           t_submit=t_submit,
+                           lengths=tuple(
+                               a.shape[self.pad_axis]
+                               if a.ndim > self.pad_axis else 1
+                               for a in arrs))
+        self.n_submitted += 1
+        key = self.bucket_key_for(arrs)
+        self._pending.setdefault(key, []).append(req)
+        return req
+
+    def pop_full(self) -> List[MicroBatch]:
+        """Micro-batches for every bucket that reached ``max_batch``."""
+        out = []
+        for key, reqs in list(self._pending.items()):
+            while len(reqs) >= self.max_batch:
+                take, self._pending[key] = (reqs[: self.max_batch],
+                                            reqs[self.max_batch:])
+                reqs = self._pending[key]
+                out.append(self._collate(key, take))
+            if not reqs:
+                del self._pending[key]
+        return out
+
+    def drain(self) -> List[MicroBatch]:
+        """Flush every pending bucket (partial batches padded to capacity)."""
+        out = self.pop_full()
+        for key, reqs in list(self._pending.items()):
+            if reqs:
+                out.append(self._collate(key, reqs))
+        self._pending.clear()
+        return out
+
+    @property
+    def n_pending(self) -> int:
+        return sum(len(v) for v in self._pending.values())
+
+    # -- collation ----------------------------------------------------------
+    def _collate(self, key: Tuple[Any, ...],
+                 reqs: Sequence[ServeRequest]) -> MicroBatch:
+        self.n_batches += 1
+        n_arrays = len(key)
+        stacked = []
+        for j in range(n_arrays):
+            shape, _dtype = key[j]
+            rows = []
+            for r in reqs:
+                a = r.arrays[j]
+                if a.ndim > self.pad_axis:
+                    padded = pad_to(a, shape[self.pad_axis], self.pad_axis,
+                                    self.fill)
+                    self.padded_elements += int(padded.size - a.size)
+                    rows.append(padded)
+                else:
+                    rows.append(a)
+            batch = jnp.stack(rows)
+            if len(reqs) < self.max_batch:          # pad the batch dim too:
+                extra = self.max_batch - len(reqs)  # one shape per bucket
+                batch = jnp.concatenate(
+                    [batch, jnp.full((extra,) + batch.shape[1:], self.fill,
+                                     batch.dtype)])
+                self.padded_elements += extra * math.prod(batch.shape[1:])
+            stacked.append(batch)
+        return MicroBatch(bucket_key=key, inputs=tuple(stacked),
+                          requests=tuple(reqs), capacity=self.max_batch,
+                          pad_axis=self.pad_axis,
+                          crop_outputs=self.crop_outputs)
+
+
+# ---------------------------------------------------------------------------
+# Lifting a per-request pipeline over the batch axis
+# ---------------------------------------------------------------------------
+def _batched_executor(executor: Callable[..., Any],
+                      n_consts: int) -> Callable[..., Any]:
+    def batched(*arrays: Any, **params: Any) -> Any:
+        n_data = len(arrays) - n_consts
+        in_axes = (0,) * n_data + (None,) * n_consts
+        return jax.vmap(lambda *a: executor(*a, **params),
+                        in_axes=in_axes)(*arrays)
+    return batched
+
+
+def _batched_counts(counts: Optional[Callable[..., WorkCounts]],
+                    batch: int) -> Optional[Callable[..., WorkCounts]]:
+    if counts is None:
+        return None
+
+    def scaled(**kw: Any) -> WorkCounts:
+        return counts(**kw).scaled(batch)
+    return scaled
+
+
+def batched_stages(stages: Sequence[Stage], batch: int) -> List[Stage]:
+    """Lift per-request :class:`Stage`\\ s to operate on a ``batch``-stacked
+    leading axis: data flows through ``jax.vmap`` (constants broadcast), and
+    each kernel's ``counts`` are scaled by ``batch`` so the modeled
+    time/energy describes the whole micro-batch."""
+    out = []
+    for st in stages:
+        kern = Kernel(
+            name=st.kernel.name,
+            executor=_batched_executor(st.kernel.executor, len(st.consts)),
+            counts=_batched_counts(st.kernel.counts, batch),
+            jitted=False,   # the vmap wrapper is a fresh unjitted callable
+        )
+        out.append(Stage(kern, params=dict(st.params),
+                         counts_params=dict(st.counts_params),
+                         consts=tuple(st.consts), n_inputs=st.n_inputs))
+    return out

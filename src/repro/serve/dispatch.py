@@ -1,0 +1,180 @@
+"""Multi-queue dispatch — load balancing, backpressure, per-queue accounting.
+
+One e-GPU instance is one in-order queue; a serving deployment runs several
+(possibly heterogeneous — different ``EGPUConfig`` presets, mirroring the
+paper's configurability story).  The dispatcher routes each micro-batch to
+the least-loaded :class:`QueueWorker`, bounds every worker's in-flight depth
+(launch beyond ``max_in_flight`` first retires the oldest ticket — classic
+credit-based backpressure, keeping queue memory and latency bounded), and
+rolls per-queue machine-model totals up for the
+:class:`~repro.serve.server.ServeReport`.
+
+Workers retire tickets through the Event-lifecycle API: after a ticket's
+outputs are realized, ``queue.finish()`` + ``queue.release_events()`` return
+the graph's queue to O(in-flight) memory while the released events' modeled
+time/energy stay in the queue's running totals.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import List, Optional, Sequence, Tuple
+
+import jax
+
+from ..core.apu import APU
+from ..core.device import EGPUConfig
+from ..core.machine import PhaseBreakdown
+from ..core.runtime import Buffer, CommandGraph
+from .batching import MicroBatch
+
+
+@dataclasses.dataclass
+class LaunchTicket:
+    """One in-flight micro-batch launch and its modeled cost."""
+
+    batch: MicroBatch
+    outputs: Tuple[Buffer, ...]
+    worker: "QueueWorker"
+    #: fused breakdown of the whole batched chain (startup+scheduling paid
+    #: once per launch — every request in the batch experiences this latency)
+    fused: Optional[PhaseBreakdown]
+    energy_j: float
+    t_launch: float
+    t_done: Optional[float] = None
+    #: events this launch appended to its graph's queue (one per node)
+    n_events: int = 0
+
+    @property
+    def done(self) -> bool:
+        return self.t_done is not None
+
+    @property
+    def modeled_latency_s(self) -> Optional[float]:
+        return None if self.fused is None else self.fused.total_s
+
+
+class QueueWorker:
+    """One serving lane: an :class:`APU` + bounded in-flight window.
+
+    ``max_in_flight`` is the backpressure credit count: a launch that would
+    exceed it first retires the oldest outstanding ticket (waiting on its
+    results and releasing its queue events), so a worker can never
+    accumulate unbounded speculative work.
+    """
+
+    def __init__(self, config: EGPUConfig, name: Optional[str] = None,
+                 max_in_flight: int = 2):
+        if max_in_flight < 1:
+            raise ValueError("max_in_flight must be >= 1")
+        self.apu = APU(config)
+        self.name = name or config.name
+        self.max_in_flight = max_in_flight
+        self._inflight: List[Tuple[LaunchTicket, CommandGraph]] = []
+        # accounting
+        self.n_batches = 0
+        self.n_requests = 0
+        self.modeled_s = 0.0
+        self.energy_j = 0.0
+        self.peak_in_flight = 0
+        self.backpressure_stalls = 0
+
+    @property
+    def depth(self) -> int:
+        return len(self._inflight)
+
+    # -- launch / retire ----------------------------------------------------
+    def launch(self, graph: CommandGraph, batch: MicroBatch
+               ) -> Tuple[LaunchTicket, List[LaunchTicket]]:
+        """Launch ``batch`` through ``graph``; returns the new ticket plus
+        any tickets retired to stay under the in-flight bound."""
+        retired = []
+        while len(self._inflight) >= self.max_in_flight:
+            self.backpressure_stalls += 1
+            retired.append(self._retire_oldest())
+        outs = graph.launch_prefix(batch.inputs)
+        fused, energy = graph.fused_modeled()   # memoized: launch-invariant
+        ticket = LaunchTicket(batch=batch, outputs=outs, worker=self,
+                              fused=fused, energy_j=energy,
+                              t_launch=time.perf_counter(),
+                              n_events=len(graph.nodes))
+        self._inflight.append((ticket, graph))
+        self.peak_in_flight = max(self.peak_in_flight, len(self._inflight))
+        self.n_batches += 1
+        self.n_requests += batch.n_requests
+        if fused is not None:
+            self.modeled_s += fused.total_s
+        self.energy_j += energy
+        return ticket, retired
+
+    def _retire_oldest(self) -> LaunchTicket:
+        ticket, graph = self._inflight.pop(0)
+        for b in ticket.outputs:
+            if isinstance(b.data, jax.Array):
+                b.data.block_until_ready()
+        # Release exactly this launch's event segment.  Tickets on one
+        # graph retire oldest-first, so the segment sits at the queue head;
+        # a partial drain never synchronizes launches enqueued after it.
+        # (When same-config workers share a cached graph, head segments can
+        # belong to a sibling's equal-length launch — counts and totals
+        # stay exact either way, and ticket outputs hold their own buffers.)
+        graph.queue.drain(ticket.n_events)
+        graph.queue.release_events(upto=ticket.n_events)
+        ticket.t_done = time.perf_counter()
+        return ticket
+
+    def drain(self) -> List[LaunchTicket]:
+        """Retire every outstanding ticket (oldest first)."""
+        out = []
+        while self._inflight:
+            out.append(self._retire_oldest())
+        return out
+
+    def stats(self) -> "QueueStats":
+        return QueueStats(
+            name=self.name, config=self.apu.egpu.config.name,
+            batches=self.n_batches, requests=self.n_requests,
+            modeled_s=self.modeled_s, energy_j=self.energy_j,
+            peak_in_flight=self.peak_in_flight,
+            backpressure_stalls=self.backpressure_stalls)
+
+
+@dataclasses.dataclass(frozen=True)
+class QueueStats:
+    """Per-queue roll-up surfaced in the :class:`ServeReport`."""
+
+    name: str
+    config: str
+    batches: int
+    requests: int
+    modeled_s: float
+    energy_j: float
+    peak_in_flight: int
+    backpressure_stalls: int
+
+
+class MultiQueueDispatcher:
+    """Route micro-batches to the least-loaded worker (ties: stable order)."""
+
+    def __init__(self, workers: Sequence[QueueWorker]):
+        if not workers:
+            raise ValueError("need at least one QueueWorker")
+        names = [w.name for w in workers]
+        if len(set(names)) != len(names):
+            raise ValueError(f"duplicate worker names: {names}")
+        self.workers = list(workers)
+
+    def pick(self) -> QueueWorker:
+        """Least in-flight depth first, then least requests served — a
+        faster / wider queue naturally attracts more traffic."""
+        return min(self.workers, key=lambda w: (w.depth, w.n_requests))
+
+    def drain_all(self) -> List[LaunchTicket]:
+        out: List[LaunchTicket] = []
+        for w in self.workers:
+            out.extend(w.drain())
+        return out
+
+    def stats(self) -> Tuple[QueueStats, ...]:
+        return tuple(w.stats() for w in self.workers)

@@ -1,0 +1,249 @@
+"""Server — the long-lived serving engine over APU pipelines.
+
+Ties the subsystem together: requests enter :meth:`Server.submit`, the
+:class:`~repro.serve.batching.BucketBatcher` pads them to shape buckets and
+coalesces full micro-batches, the
+:class:`~repro.serve.cache.GraphCache` supplies (or captures, once per
+bucket x worker) the batched :class:`CommandGraph`, and the
+:class:`~repro.serve.dispatch.MultiQueueDispatcher` load-balances launches
+across the configured e-GPU queues under an in-flight bound.  A warm server
+on steady-state traffic therefore performs **zero** re-captures / re-jits:
+every launch is a cached-graph replay, paying Tiny-OpenCL startup +
+scheduling once per micro-batch (paper §IV-B residency, scaled out).
+
+:meth:`Server.report` rolls the per-queue machine-model accounting into a
+:class:`ServeReport`: measured requests/s, modeled per-request latency
+percentiles (each request experiences its batch's fused-chain latency) and
+modeled energy per request.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+from typing import Any, Deque, Dict, List, Optional, Sequence, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.apu import Stage
+from ..core.device import EGPUConfig, EGPU_16T
+from .batching import BucketBatcher, MicroBatch, batched_stages
+from .cache import GraphCache, stages_signature
+from .dispatch import LaunchTicket, MultiQueueDispatcher, QueueStats, QueueWorker
+
+PERCENTILES = (50, 90, 99)
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeReport:
+    """Aggregate serving metrics (measured throughput, modeled cost)."""
+
+    n_requests: int
+    n_batches: int
+    wall_s: float
+    requests_per_s: float
+    #: modeled request latency percentiles, seconds (p50/p90/p99); a request
+    #: experiences the fused-chain latency of the micro-batch carrying it
+    modeled_latency_s: Dict[int, float]
+    #: mean amortized cost per request (batch fused time / live requests) —
+    #: the throughput view of the same launches
+    modeled_cost_per_request_s: float
+    modeled_energy_per_request_j: float
+    avg_batch_fill: float              # live requests / batch capacity
+    padded_elements: int               # elements added purely by padding
+    queues: Tuple[QueueStats, ...]
+    cache: Dict[str, int]
+
+    def summary(self) -> str:
+        lines = [
+            f"requests        {self.n_requests} in {self.n_batches} batches "
+            f"(fill {self.avg_batch_fill:.0%}, "
+            f"{self.padded_elements} padded elements)",
+            f"throughput      {self.requests_per_s:,.0f} req/s measured "
+            f"({self.wall_s * 1e3:.1f} ms wall)",
+            "modeled latency " + "  ".join(
+                f"p{p} {self.modeled_latency_s[p] * 1e3:.3f} ms"
+                for p in sorted(self.modeled_latency_s)),
+            f"modeled cost    {self.modeled_cost_per_request_s * 1e3:.3f} "
+            f"ms/request amortized, "
+            f"{self.modeled_energy_per_request_j * 1e6:.2f} uJ/request",
+            f"graph cache     {self.cache['hits']} hits / "
+            f"{self.cache['misses']} misses / "
+            f"{self.cache['evictions']} evictions "
+            f"({self.cache['entries']}/{self.cache['capacity']} resident)",
+        ]
+        for qs in self.queues:
+            lines.append(
+                f"  queue {qs.name:12s} {qs.batches:4d} batches "
+                f"{qs.requests:5d} reqs  modeled {qs.modeled_s * 1e3:8.2f} ms "
+                f"{qs.energy_j * 1e6:8.1f} uJ  peak in-flight "
+                f"{qs.peak_in_flight} ({qs.backpressure_stalls} stalls)")
+        return "\n".join(lines)
+
+
+class Server:
+    """A long-lived serving engine for one APU pipeline.
+
+    ``stages`` carry *per-request* semantics (exactly what
+    :meth:`APU.offload` takes); the server lifts them over the batch axis
+    internally.  ``workers`` name the e-GPU presets to dispatch across —
+    heterogeneous mixes are fine, each gets its own cached graphs.
+
+    Pipeline contract: kernels must be pad-stable along axis 0 of each
+    request array (see :mod:`repro.serve.batching`).
+    """
+
+    def __init__(self, stages: Sequence[Stage],
+                 workers: Sequence[EGPUConfig] = (EGPU_16T,),
+                 bucket_sizes: Sequence[int] = (64, 256, 1024),
+                 max_batch: int = 4, max_in_flight: int = 2,
+                 cache_capacity: int = 32, fill: float | int = 0,
+                 crop_outputs: bool = True,
+                 metrics_window: int = 100_000):
+        self.stages = tuple(stages)
+        self.batcher = BucketBatcher(bucket_sizes, max_batch=max_batch,
+                                     fill=fill, crop_outputs=crop_outputs)
+        self.dispatcher = MultiQueueDispatcher([
+            QueueWorker(cfg, name=f"{i}:{cfg.name}",
+                        max_in_flight=max_in_flight)
+            for i, cfg in enumerate(workers)])
+        self.cache = GraphCache(cache_capacity)
+        # Every micro-batch is padded to max_batch, so ONE batched pipeline
+        # covers all traffic; its (const-hashing) signature is computed once
+        # here, never on the hot path.
+        self._bstages = batched_stages(self.stages, max_batch)
+        self._bsig = stages_signature(self._bstages)
+        self._results: Dict[int, Tuple[Any, ...]] = {}
+        # Bounded metric windows: percentiles/means in report() describe the
+        # last `metrics_window` requests, so a long-lived server's metric
+        # memory is O(window), matching the O(in-flight) queue contract.
+        self._modeled_latency: Deque[float] = deque(maxlen=metrics_window)
+        self._modeled_cost: Deque[float] = deque(maxlen=metrics_window)
+        self._modeled_energy: Deque[float] = deque(maxlen=metrics_window)
+        self._n_done = 0
+        self._t0: Optional[float] = None
+        self._t_last: Optional[float] = None
+
+    # -- warm-up ------------------------------------------------------------
+    def warmup(self, *example_arrays: Any) -> int:
+        """Pre-capture the batched graph for every (bucket, worker) pair.
+
+        ``example_arrays`` is one representative request (its trailing dims
+        and dtypes define the bucket shapes; values are irrelevant — capture
+        traces abstractly).  After ``warmup`` a server sees zero re-captures
+        on any traffic that fits the configured buckets.  Returns the number
+        of graphs captured.
+        """
+        arrs = tuple(jnp.asarray(a) for a in example_arrays)
+        captured = 0
+        for size in self.batcher.bucket_sizes:
+            inputs = []
+            for a in arrs:
+                shape = ((self.batcher.max_batch,) if a.ndim == 0 else
+                         (self.batcher.max_batch, size) + a.shape[1:])
+                inputs.append(jnp.zeros(shape, a.dtype))
+            for worker in self.dispatcher.workers:
+                _graph, hit = self.cache.get_or_capture(
+                    worker.apu, self._bstages, tuple(inputs),
+                    key_prefix=self._bsig)
+                captured += 0 if hit else 1
+        return captured
+
+    # -- request intake -----------------------------------------------------
+    def submit(self, *arrays: Any) -> int:
+        """Enqueue one request; full buckets launch immediately.
+
+        Returns the request id; fetch its outputs with :meth:`result` after
+        a :meth:`flush` (or once enough same-bucket traffic flushed it
+        naturally)."""
+        now = time.perf_counter()
+        if self._t0 is None:
+            self._t0 = now
+        req = self.batcher.submit(*arrays, t_submit=now)
+        self._launch(self.batcher.pop_full())
+        return req.rid
+
+    def flush(self) -> None:
+        """Force every pending request through: drain partial buckets, then
+        retire all in-flight launches."""
+        self._launch(self.batcher.drain())
+        self._finalize(self.dispatcher.drain_all())
+
+    # -- results ------------------------------------------------------------
+    def result(self, rid: int, keep: bool = False) -> Tuple[Any, ...]:
+        """Per-request outputs (cropped back to the request's true extent).
+
+        Pops the stored result by default so a long-lived server's result
+        store stays bounded by its *unread* requests (pass ``keep=True`` to
+        leave it readable again).  Results of requests no client ever reads
+        do accumulate — read or discard what you submit.
+        """
+        if rid not in self._results:
+            raise KeyError(
+                f"request {rid} has no result (yet, or it was already "
+                "read) — flush() the server or submit enough traffic to "
+                "fill its bucket")
+        return (self._results[rid] if keep
+                else self._results.pop(rid))
+
+    @property
+    def n_completed(self) -> int:
+        return self._n_done
+
+    # -- internals ----------------------------------------------------------
+    def _launch(self, batches: Sequence[MicroBatch]) -> None:
+        for batch in batches:
+            worker = self.dispatcher.pick()
+            graph, _hit = self.cache.get_or_capture(
+                worker.apu, self._bstages, batch.inputs,
+                key_prefix=self._bsig)
+            _ticket, retired = worker.launch(graph, batch)
+            self._finalize(retired)
+
+    def _finalize(self, tickets: Sequence[LaunchTicket]) -> None:
+        for t in tickets:
+            per_request = t.batch.crop(t.outputs)
+            n = max(1, t.batch.n_requests)
+            for req, outs in zip(t.batch.requests, per_request):
+                self._results[req.rid] = outs
+                if t.fused is not None:
+                    # each request *experiences* the whole batch's fused
+                    # latency; its amortized cost share (the throughput
+                    # view) and energy split across the live requests
+                    self._modeled_latency.append(t.fused.total_s)
+                    self._modeled_cost.append(t.fused.scaled(1.0 / n).total_s)
+                    self._modeled_energy.append(t.energy_j / n)
+                self._n_done += 1
+            if t.t_done is not None:
+                self._t_last = (t.t_done if self._t_last is None
+                                else max(self._t_last, t.t_done))
+
+    # -- reporting ----------------------------------------------------------
+    def report(self) -> ServeReport:
+        wall = ((self._t_last - self._t0)
+                if self._t0 is not None and self._t_last is not None else 0.0)
+        lat = np.asarray(self._modeled_latency, np.float64)
+        pct = {p: (float(np.percentile(lat, p)) if lat.size else 0.0)
+               for p in PERCENTILES}
+        cost = (float(np.mean(self._modeled_cost))
+                if self._modeled_cost else 0.0)
+        energy = (float(np.mean(self._modeled_energy))
+                  if self._modeled_energy else 0.0)
+        n_batches = self.batcher.n_batches
+        fill = (self._n_done / (n_batches * self.batcher.max_batch)
+                if n_batches else 0.0)
+        return ServeReport(
+            n_requests=self._n_done,
+            n_batches=n_batches,
+            wall_s=wall,
+            requests_per_s=(self._n_done / wall if wall > 0 else 0.0),
+            modeled_latency_s=pct,
+            modeled_cost_per_request_s=cost,
+            modeled_energy_per_request_j=energy,
+            avg_batch_fill=fill,
+            padded_elements=self.batcher.padded_elements,
+            queues=self.dispatcher.stats(),
+            cache=self.cache.stats(),
+        )

@@ -58,8 +58,9 @@ def test_finish_drains_all_events():
 
 
 def test_finish_watermark_only_drains_new_events():
+    # profiled queue: full history retained, watermark advances monotonically
     ctx = _ctx()
-    q = CommandQueue(ctx, profile=False)
+    q = CommandQueue(ctx)
     a = ctx.create_buffer(jnp.ones((8, 8), jnp.float32))
     q.enqueue_nd_range(_mm_kernel(), NDR, (a, a))
     q.finish()
@@ -69,6 +70,22 @@ def test_finish_watermark_only_drains_new_events():
     assert q._drained == 2 and e2.done
     q.finish()                           # idempotent on a drained queue
     assert q._drained == 2
+
+
+def test_unprofiled_finish_releases_events():
+    """An unprofiled queue auto-releases on finish (ISSUE-2 satellite): a
+    long-lived service queue stays O(in-flight) memory."""
+    ctx = _ctx()
+    q = CommandQueue(ctx, profile=False)
+    a = ctx.create_buffer(jnp.ones((8, 8), jnp.float32))
+    evs = [q.enqueue_nd_range(_mm_kernel(), NDR, (a, a)) for _ in range(3)]
+    q.finish()
+    assert q.events == () and q.released_count == 3
+    assert all(e.done and e.released and e.outputs == () for e in evs)
+    # the queue keeps working after a release sweep
+    e = q.enqueue_nd_range(_mm_kernel(), NDR, (a, a))
+    q.finish()
+    assert e.done and q.released_count == 4
 
 
 def test_blocking_queue_syncs_each_launch():

@@ -1,0 +1,500 @@
+"""repro.serve — graph cache, dynamic batching, multi-queue dispatch
+(ISSUE 2).
+
+Pins the subsystem's contracts: cache hit/miss/eviction and config
+isolation, cached-launch numerical identity with fresh capture, batcher
+padding at bucket boundaries, the warm-server zero-re-capture guarantee
+with bit-identical batched results, event-lifecycle memory bounds, and
+dispatcher backpressure.
+"""
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (APU, EGPU_4T, EGPU_8T, EGPU_16T, CommandQueue,
+                        Context, Device, Kernel, NDRange, Stage, WorkCounts)
+from repro.kernels.gemm.ref import counts as gemm_counts
+from repro.kernels.gemm.ref import gemm_ref
+from repro.serve import (BucketBatcher, GraphCache, MultiQueueDispatcher,
+                         QueueWorker, Server, batched_stages)
+
+NDR = NDRange((8, 8), (4, 4))
+
+
+def _mm_stages(d=8, seed=0, n=1):
+    """n chained (x @ W -> relu) stages with a fixed weight."""
+    rng = np.random.default_rng(seed)
+    w = jnp.asarray(rng.standard_normal((d, d)) * 0.2, jnp.float32)
+
+    def mlp(x, w):
+        return jnp.maximum(gemm_ref(x, w), 0.0)
+
+    kern = Kernel("mlp", executor=mlp,
+                  counts=lambda **kw: gemm_counts(m=d, n=d, k=d))
+    return [Stage(kern, consts=(w,), n_inputs=1) for _ in range(n)]
+
+
+def _x(shape=(8, 8), seed=1):
+    return jnp.asarray(np.random.default_rng(seed).standard_normal(shape),
+                       jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# GraphCache
+# ---------------------------------------------------------------------------
+def test_cache_hit_miss_counters():
+    cache = GraphCache(capacity=4)
+    apu = APU(EGPU_16T, graph_cache=cache)
+    stages = _mm_stages()
+    x = _x()
+    o1, _ = apu.offload(stages, (x,))
+    assert (cache.hits, cache.misses) == (0, 1)
+    o2, _ = apu.offload(stages, (x,))
+    assert (cache.hits, cache.misses) == (1, 1)
+    np.testing.assert_array_equal(np.asarray(o1[0].data),
+                                  np.asarray(o2[0].data))
+    # a different input SHAPE is a different entry
+    apu.offload(stages, (_x((4, 8)),))
+    assert (cache.hits, cache.misses) == (1, 2)
+
+
+def test_cache_lru_eviction():
+    cache = GraphCache(capacity=2)
+    apu = APU(EGPU_16T, graph_cache=cache)
+    stages = _mm_stages()
+    xa, xb, xc = _x((2, 8)), _x((4, 8)), _x((6, 8))
+    apu.offload(stages, (xa,))
+    apu.offload(stages, (xb,))
+    apu.offload(stages, (xa,))           # promote A to MRU
+    apu.offload(stages, (xc,))           # evicts B (LRU)
+    assert cache.evictions == 1 and len(cache) == 2
+    apu.offload(stages, (xb,))           # B must re-capture (evicts A)
+    assert cache.misses == 4 and cache.evictions == 2
+    apu.offload(stages, (xc,))           # C still resident
+    assert cache.hits == 2
+
+
+def test_cache_distinct_configs_do_not_collide():
+    cache = GraphCache(capacity=8)
+    stages = _mm_stages()
+    x = _x()
+    outs = {}
+    for cfg in (EGPU_4T, EGPU_8T, EGPU_16T):
+        apu = APU(cfg, graph_cache=cache)
+        (o,), rep = apu.offload(stages, (x,))
+        outs[cfg.name] = np.asarray(o.data)
+        # each config modeled with its own machine numbers
+        assert rep.stages[0].egpu is not None
+    assert cache.misses == 3 and cache.hits == 0
+    # same pipeline again on each config: all hits now
+    for cfg in (EGPU_4T, EGPU_8T, EGPU_16T):
+        APU(cfg, graph_cache=cache).offload(stages, (x,))
+    assert cache.hits == 3
+    for name, o in outs.items():         # functional results config-invariant
+        np.testing.assert_array_equal(o, outs[EGPU_16T.name])
+
+
+def test_cache_distinct_consts_do_not_collide():
+    """Same kernel names, different baked weights => different entries (a
+    false hit would serve the wrong model)."""
+    cache = GraphCache(capacity=8)
+    apu = APU(EGPU_16T, graph_cache=cache)
+    x = _x()
+    (o1,), _ = apu.offload(_mm_stages(seed=0), (x,))
+    (o2,), _ = apu.offload(_mm_stages(seed=7), (x,))
+    assert cache.misses == 2
+    assert not np.array_equal(np.asarray(o1.data), np.asarray(o2.data))
+
+
+def test_cache_distinct_closures_do_not_collide():
+    """Two lambdas born at the same source line capturing different values
+    must get different entries — a false hit replays the wrong capture."""
+    cache = GraphCache(capacity=8)
+    apu = APU(EGPU_16T, graph_cache=cache)
+    x = jnp.ones((4,), jnp.float32)
+
+    def scale_stage(k):
+        return [Stage(Kernel("scale", executor=lambda a: a * k))]
+
+    (o2,), _ = apu.offload(scale_stage(2.0), (x,))
+    (o3,), _ = apu.offload(scale_stage(3.0), (x,))
+    assert cache.misses == 2
+    np.testing.assert_array_equal(np.asarray(o2.data), 2.0 * np.ones(4))
+    np.testing.assert_array_equal(np.asarray(o3.data), 3.0 * np.ones(4))
+    # identical capture value => genuine hit
+    apu.offload(scale_stage(2.0), (x,))
+    assert cache.hits == 1
+
+
+def test_cache_distinct_inline_literals_do_not_collide():
+    """Executors differing only in an inline constant share co_code — the
+    signature must still tell them apart (co_consts hashed)."""
+    cache = GraphCache(capacity=8)
+    apu = APU(EGPU_16T, graph_cache=cache)
+    x = jnp.ones((4,), jnp.float32)
+    (o2,), _ = apu.offload([Stage(Kernel("s", executor=lambda a: a * 2.0))],
+                           (x,))
+    (o3,), _ = apu.offload([Stage(Kernel("s", executor=lambda a: a * 3.0))],
+                           (x,))
+    assert cache.misses == 2
+    np.testing.assert_array_equal(np.asarray(o2.data), 2.0 * np.ones(4))
+    np.testing.assert_array_equal(np.asarray(o3.data), 3.0 * np.ones(4))
+
+
+def test_cache_large_arrays_in_containers_do_not_collide():
+    """A closure capturing a LIST of large arrays must sign element-wise —
+    repr truncates big arrays to '...', which would collide."""
+    cache = GraphCache(capacity=8)
+    apu = APU(EGPU_16T, graph_cache=cache)
+    x = jnp.ones((4,), jnp.float32)
+    w1 = np.zeros(10_000, np.float32)
+    w2 = w1.copy()
+    w2[5_000] = 1.0                      # differs only mid-array
+
+    def stage_for(ws):
+        return [Stage(Kernel("pick", executor=lambda a: a * ws[0][5_000]))]
+
+    (o1,), _ = apu.offload(stage_for([jnp.asarray(w1)]), (x,))
+    (o2,), _ = apu.offload(stage_for([jnp.asarray(w2)]), (x,))
+    assert cache.misses == 2             # no false hit
+    np.testing.assert_array_equal(np.asarray(o1.data), np.zeros(4))
+    np.testing.assert_array_equal(np.asarray(o2.data), np.ones(4))
+
+
+def test_batch_dim_padding_uses_fill_value():
+    b = BucketBatcher((4,), max_batch=3, fill=1.0)
+    b.submit(jnp.full((4,), 2.0, jnp.float32))
+    (mb,) = b.drain()
+    # dead capacity rows use the configured fill, not zeros (kernels like
+    # 1/x rely on it to stay finite)
+    np.testing.assert_array_equal(np.asarray(mb.inputs[0][1:]),
+                                  np.ones((2, 4), np.float32))
+
+
+def test_cached_offload_reuses_pipeline_report():
+    cache = GraphCache(capacity=4)
+    apu = APU(EGPU_16T, graph_cache=cache)
+    stages = _mm_stages()
+    _, r1 = apu.offload(stages, (_x(),))
+    _, r2 = apu.offload(stages, (_x(seed=5),))
+    assert r2 is r1                      # launch-invariant, memoized
+
+
+def test_cache_signature_memo_reused_for_same_stage_objects():
+    cache = GraphCache(capacity=8)
+    apu = APU(EGPU_16T, graph_cache=cache)
+    stages = _mm_stages()
+    x = _x()
+    apu.offload(stages, (x,))
+    apu.offload(stages, (x,))
+    assert len(cache._sig_memo) == 1     # same Stage list: hashed once
+    assert (cache.hits, cache.misses) == (1, 1)
+
+
+def test_cached_launch_identical_to_fresh_capture():
+    cache = GraphCache(capacity=4)
+    cached_apu = APU(EGPU_16T, graph_cache=cache)
+    fresh_apu = APU(EGPU_16T)            # no cache: re-captures every call
+    stages = _mm_stages(n=3)
+    for seed in (1, 2, 3):
+        x = _x(seed=seed)
+        (oc,), rep_c = cached_apu.offload(stages, (x,))
+        (of,), rep_f = fresh_apu.offload(stages, (x,))
+        np.testing.assert_array_equal(np.asarray(oc.data),
+                                      np.asarray(of.data))
+        # machine-model accounting identical through the cached path
+        assert rep_c.overall_speedup == rep_f.overall_speedup
+        assert rep_c.egpu_fused.total_s == rep_f.egpu_fused.total_s
+    assert cache.misses == 1 and cache.hits == 2
+
+
+# ---------------------------------------------------------------------------
+# BucketBatcher
+# ---------------------------------------------------------------------------
+def test_bucket_selection_and_boundaries():
+    b = BucketBatcher((8, 16), max_batch=2)
+    assert b.bucket_size_for(1) == 8
+    assert b.bucket_size_for(8) == 8     # exactly on the boundary: no bump
+    assert b.bucket_size_for(9) == 16
+    assert b.bucket_size_for(16) == 16
+    with pytest.raises(ValueError):
+        b.bucket_size_for(17)
+
+
+def test_batcher_pads_and_crops_at_bucket_boundary():
+    b = BucketBatcher((8,), max_batch=2)
+    r1 = b.submit(jnp.arange(5, dtype=jnp.float32))     # padded 5 -> 8
+    r2 = b.submit(jnp.arange(8, dtype=jnp.float32))     # exact fit: no pad
+    (mb,) = b.pop_full()
+    assert mb.inputs[0].shape == (2, 8)
+    np.testing.assert_array_equal(
+        np.asarray(mb.inputs[0][0]), [0, 1, 2, 3, 4, 0, 0, 0])
+    np.testing.assert_array_equal(
+        np.asarray(mb.inputs[0][1]), np.arange(8, dtype=np.float32))
+    # crop returns each request's true extent
+    outs = mb.crop([mb.inputs[0] * 2])
+    assert outs[0][0].shape == (5,) and outs[1][0].shape == (8,)
+    np.testing.assert_array_equal(np.asarray(outs[0][0]), [0, 2, 4, 6, 8])
+
+
+def test_batcher_partial_batch_padded_to_capacity():
+    b = BucketBatcher((4,), max_batch=3)
+    b.submit(jnp.ones(4, jnp.float32))
+    assert b.pop_full() == [] and b.n_pending == 1
+    (mb,) = b.drain()
+    assert mb.inputs[0].shape == (3, 4)  # batch dim padded to capacity
+    assert mb.n_requests == 1 and b.n_pending == 0
+    np.testing.assert_array_equal(np.asarray(mb.inputs[0][1]), np.zeros(4))
+
+
+def test_batcher_pad_axis_1_crops_columns():
+    """pad_axis=1: padding and cropping act on columns, not rows."""
+    b = BucketBatcher((8,), max_batch=1, pad_axis=1)
+    r = b.submit(jnp.ones((3, 5), jnp.float32))
+    assert r.lengths == (5,)
+    (mb,) = b.drain()
+    assert mb.inputs[0].shape == (1, 3, 8)      # (batch, rows, padded cols)
+    np.testing.assert_array_equal(np.asarray(mb.inputs[0][0, :, 5:]),
+                                  np.zeros((3, 3)))
+    ((out,),) = [mb.crop([mb.inputs[0] * 2])[0]]
+    assert out.shape == (3, 5)                  # columns cropped back
+    np.testing.assert_array_equal(np.asarray(out), 2 * np.ones((3, 5)))
+
+
+def test_crop_outputs_false_returns_padded_rows():
+    """Pipelines whose outputs have fixed dims equal to a bucket size must
+    be able to opt out of the shape-match crop heuristic."""
+    b = BucketBatcher((8,), max_batch=1, crop_outputs=False)
+    r = b.submit(jnp.arange(5, dtype=jnp.float32))
+    (mb,) = b.drain()
+    (row,) = mb.crop([mb.inputs[0] * 2])[0]
+    assert row.shape == (8,)             # padded extent kept
+    assert r.lengths == (5,)             # caller slices with this
+
+
+def test_batched_stages_scale_counts():
+    stages = _mm_stages()
+    bs = batched_stages(stages, batch=4)
+    base = stages[0].kernel.counts()
+    scaled = bs[0].kernel.counts()
+    assert scaled.ops == 4 * base.ops
+    assert scaled.host_bytes == 4 * base.host_bytes
+
+
+# ---------------------------------------------------------------------------
+# Warm server: zero re-captures, bit-identical results (acceptance)
+# ---------------------------------------------------------------------------
+def test_warm_server_zero_recaptures_and_bit_identical():
+    stages = _mm_stages(n=2)
+    srv = Server(stages, workers=(EGPU_16T,), bucket_sizes=(8,),
+                 max_batch=2, max_in_flight=2)
+    rng = np.random.default_rng(3)
+    rids = []
+    for _ in range(8):                   # 4 full batches, one bucket
+        x = jnp.asarray(rng.standard_normal(
+            (int(rng.integers(3, 9)), 8)), jnp.float32)
+        rids.append((srv.submit(x), x))
+    srv.flush()
+    # ZERO re-captures after the first: one bucket x one worker = 1 miss
+    assert srv.cache.misses == 1
+    assert srv.cache.hits == 3
+    # batched results bit-identical to per-request eager offload
+    apu = APU(EGPU_16T)
+    for rid, x in rids:
+        (got,) = srv.result(rid)
+        ref, _ = apu.offload(stages, (x,), mode="eager")
+        assert np.array_equal(np.asarray(got), np.asarray(ref[0].data))
+
+
+def test_server_warmup_precaptures_every_bucket_worker_pair():
+    stages = _mm_stages()
+    srv = Server(stages, workers=(EGPU_16T, EGPU_8T), bucket_sizes=(4, 8),
+                 max_batch=2)
+    captured = srv.warmup(jnp.zeros((1, 8), jnp.float32))
+    assert captured == 4                 # 2 buckets x 2 workers
+    assert srv.warmup(jnp.zeros((1, 8), jnp.float32)) == 0   # idempotent
+    rng = np.random.default_rng(5)
+    for _ in range(12):
+        srv.submit(jnp.asarray(rng.standard_normal(
+            (int(rng.integers(1, 9)), 8)), jnp.float32))
+    srv.flush()
+    assert srv.cache.misses == 4         # nothing re-captured after warmup
+    rep = srv.report()
+    assert rep.n_requests == 12
+    assert rep.modeled_latency_s[50] > 0.0
+    assert rep.modeled_energy_per_request_j > 0.0
+    assert rep.cache["misses"] == 4
+    assert sum(q.requests for q in rep.queues) == 12
+    assert len(rep.summary()) > 0
+
+
+def test_server_report_percentiles_ordered():
+    stages = _mm_stages()
+    srv = Server(stages, workers=(EGPU_16T,), bucket_sizes=(4, 32),
+                 max_batch=2)
+    rng = np.random.default_rng(9)
+    for n in (2, 2, 30, 30, 3, 3):       # two buckets => two latency classes
+        srv.submit(jnp.asarray(rng.standard_normal((n, 8)), jnp.float32))
+    srv.flush()
+    rep = srv.report()
+    assert (rep.modeled_latency_s[50] <= rep.modeled_latency_s[90]
+            <= rep.modeled_latency_s[99])
+    assert rep.modeled_cost_per_request_s <= rep.modeled_latency_s[99]
+
+
+# ---------------------------------------------------------------------------
+# Multi-queue dispatch + backpressure
+# ---------------------------------------------------------------------------
+def test_dispatcher_balances_and_bounds_in_flight():
+    stages = _mm_stages()
+    srv = Server(stages, workers=(EGPU_16T, EGPU_8T), bucket_sizes=(8,),
+                 max_batch=1, max_in_flight=2)
+    rng = np.random.default_rng(11)
+    for _ in range(10):
+        srv.submit(jnp.asarray(rng.standard_normal((8, 8)), jnp.float32))
+    srv.flush()
+    rep = srv.report()
+    per_worker = {q.name: q for q in rep.queues}
+    assert len(per_worker) == 2
+    # least-loaded routing splits a 10-batch stream across both lanes
+    assert all(q.batches == 5 for q in rep.queues)
+    # the in-flight window is respected and backpressure engaged
+    assert all(q.peak_in_flight <= 2 for q in rep.queues)
+    assert all(q.backpressure_stalls > 0 for q in rep.queues)
+    assert all(w.depth == 0 for w in srv.dispatcher.workers)   # drained
+
+
+def test_retire_releases_only_own_event_segment():
+    """Retiring the oldest of two in-flight launches on ONE cached graph
+    must not drain or release the newer launch's events."""
+    stages = _mm_stages(n=2)
+    srv = Server(stages, workers=(EGPU_16T,), bucket_sizes=(8,),
+                 max_batch=1, max_in_flight=2)
+    rng = np.random.default_rng(13)
+    for _ in range(2):                   # two launches, same bucket/graph
+        srv.submit(jnp.asarray(rng.standard_normal((8, 8)), jnp.float32))
+    (worker,) = srv.dispatcher.workers
+    assert worker.depth == 2
+    retired = worker._retire_oldest()
+    assert retired.n_events == 2
+    # exactly one launch's segment released; the in-flight one retained
+    graph = worker._inflight[0][1]
+    assert graph.queue.released_count == 2
+    assert len(graph.queue.events) == 2
+    srv.flush()
+    assert graph.queue.released_count == 4 and graph.queue.events == ()
+
+
+def test_worker_rejects_bad_config():
+    with pytest.raises(ValueError):
+        QueueWorker(EGPU_16T, max_in_flight=0)
+    with pytest.raises(ValueError):
+        MultiQueueDispatcher([])
+    w1, w2 = QueueWorker(EGPU_16T, name="a"), QueueWorker(EGPU_8T, name="a")
+    with pytest.raises(ValueError):
+        MultiQueueDispatcher([w1, w2])
+
+
+# ---------------------------------------------------------------------------
+# Event lifecycle: bounded profiling window, retain, accounting
+# ---------------------------------------------------------------------------
+def _counts_kernel():
+    return Kernel(
+        "twice", executor=lambda x: x * 2,
+        counts=lambda **kw: WorkCounts(ops=64, dcache_bytes=256,
+                                       host_bytes=256, working_set=256))
+
+
+def test_release_events_preserves_totals():
+    ctx = Context(Device(EGPU_16T))
+    q = CommandQueue(ctx)
+    a = ctx.create_buffer(jnp.ones(64, jnp.float32))
+    for _ in range(4):
+        q.enqueue_nd_range(_counts_kernel(), NDR, (a,))
+    q.finish()
+    before_s, before_j = q.total_modeled_s(), q.total_energy_j()
+    assert before_s > 0
+    n = q.release_events()
+    assert n == 4 and q.events == () and q.released_count == 4
+    assert q.total_modeled_s() == pytest.approx(before_s)
+    assert q.total_energy_j() == pytest.approx(before_j)
+
+
+def test_release_events_skips_undrained():
+    ctx = Context(Device(EGPU_16T))
+    q = CommandQueue(ctx)
+    a = ctx.create_buffer(jnp.ones(64, jnp.float32))
+    q.enqueue_nd_range(_counts_kernel(), NDR, (a,))
+    q.finish()
+    ev = q.enqueue_nd_range(_counts_kernel(), NDR, (a,))   # in flight
+    assert q.release_events() == 1       # only the drained one
+    assert q.events == (ev,) and not ev.released
+    q.finish()
+
+
+def test_bounded_profiling_window():
+    ctx = Context(Device(EGPU_16T))
+    q = CommandQueue(ctx, max_events=2)
+    a = ctx.create_buffer(jnp.ones(64, jnp.float32))
+    evs = []
+    for i in range(5):
+        evs.append(q.enqueue_nd_range(_counts_kernel(), NDR, (a,)))
+        q.finish()
+    assert len(q.events) == 2            # window, not full history
+    assert q.released_count == 3
+    # totals still cover all five launches
+    one = evs[0].modeled.total_s
+    assert q.total_modeled_s() == pytest.approx(5 * one)
+
+
+def test_event_retain_survives_queue_release():
+    ctx = Context(Device(EGPU_16T))
+    q = CommandQueue(ctx)
+    a = ctx.create_buffer(jnp.ones(64, jnp.float32))
+    kept = q.enqueue_nd_range(_counts_kernel(), NDR, (a,)).retain()
+    dropped = q.enqueue_nd_range(_counts_kernel(), NDR, (a,))
+    q.finish()
+    q.release_events()
+    assert dropped.released and dropped.outputs == ()
+    assert not kept.released and len(kept.outputs) == 1    # holder's ref
+    kept.release()
+    assert kept.released and kept.outputs == ()
+    with pytest.raises(RuntimeError):
+        kept.retain()
+
+
+def test_launch_prefix_replaces_leading_externals_only():
+    apu = APU(EGPU_16T)
+    stages = _mm_stages()
+    x = _x()
+    graph = apu.capture_pipeline(stages, (x,))
+    assert graph.n_request_inputs == 1
+    y = _x(seed=9)
+    (out,) = graph.launch_prefix((y,), queue_events=False)
+    w = stages[0].consts[0]
+    np.testing.assert_array_equal(
+        np.asarray(out.data),
+        np.asarray(jnp.maximum(gemm_ref(y, w), 0.0)))
+    with pytest.raises(ValueError):
+        graph.launch_prefix((y, y, y))   # more inputs than externals
+    with pytest.raises(ValueError):
+        # donating a non-replaced position would consume the captured
+        # constant buffer every later launch still needs
+        graph.launch_prefix((y,), donate=(1,))
+    # fused accounting is memoized and launch-invariant
+    assert graph.fused_modeled() is graph.fused_modeled()
+
+
+def test_server_result_pops_by_default():
+    stages = _mm_stages()
+    srv = Server(stages, workers=(EGPU_16T,), bucket_sizes=(8,), max_batch=1)
+    rid = srv.submit(jnp.ones((8, 8), jnp.float32))
+    srv.flush()
+    (out,) = srv.result(rid, keep=True)
+    (again,) = srv.result(rid)           # keep=True left it readable
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(again))
+    with pytest.raises(KeyError):
+        srv.result(rid)                  # default read popped it
