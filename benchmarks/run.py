@@ -1,20 +1,21 @@
 """Benchmark orchestrator: one bench per paper table/figure + roofline.
 
-    PYTHONPATH=src python -m benchmarks.run [--only static|gemm|tinybio|dispatch|serve|roofline]
+    PYTHONPATH=src python -m benchmarks.run [--only static|gemm|tinybio|dispatch|multiqueue|serve|roofline]
 """
 
 import argparse
 import sys
 import time
 
-from . import (bench_dispatch, bench_gemm_overhead, bench_roofline,
-               bench_serve, bench_static, bench_tinybio)
+from . import (bench_dispatch, bench_gemm_overhead, bench_multiqueue,
+               bench_roofline, bench_serve, bench_static, bench_tinybio)
 
 BENCHES = {
     "static": bench_static.run,        # paper Fig 2
     "gemm": bench_gemm_overhead.run,   # paper Fig 3
     "tinybio": bench_tinybio.run,      # paper Fig 4
     "dispatch": bench_dispatch.run,    # §VIII-B measured analogue
+    "multiqueue": bench_multiqueue.run,  # ISSUE-3 out-of-order critical path
     "serve": bench_serve.run,          # ISSUE-2 cached-graph serving path
     "roofline": bench_roofline.run,    # EXPERIMENTS §Roofline table
 }

@@ -123,6 +123,10 @@ class APU:
         self.egpu_ctx = Context(self.egpu)
         self.host_ctx = Context(self.host)
         self.graph_cache = graph_cache
+        # This APU's own launch queue: graph offloads bind their events and
+        # modeled totals here, so a shared GraphCache entry (same config,
+        # several APUs/workers) never mixes launch histories across callers.
+        self.queue = CommandQueue(self.egpu_ctx)
 
     # -- shared stage wiring -----------------------------------------------
     def wire_pipeline(self, q: CommandQueue, stages: Sequence["Stage"],
@@ -222,8 +226,10 @@ class APU:
                 self, stages, inputs, ndranges)
         else:
             graph = self.capture_pipeline(stages, inputs, ndranges)
-        q = graph.queue
-        final = graph.launch_prefix(inputs)
+        # Launch-time queue binding: events land on THIS APU's queue, not
+        # the capture queue a cached graph happens to carry.
+        q = self.queue
+        final = graph.launch_prefix(inputs, queue=q)
         q.finish()
         # The whole PipelineReport is launch-invariant for a given graph
         # (host costs come from the captured schedule, not the inputs), so
@@ -243,9 +249,9 @@ class APU:
             fused, _ = graph.fused_modeled()
             report = PipelineReport(reports, egpu_fused=fused)
             graph._pipeline_report = report
-        # A cached graph's queue lives as long as the cache entry: return it
-        # to O(1) memory now that the report is assembled (the modeled
-        # totals fold into the queue's running counters).
+        # This APU's launch queue lives as long as the APU: return it to
+        # O(1) memory now that the report is assembled (the modeled totals
+        # fold into the queue's running counters).
         q.release_events()
         return final, report
 

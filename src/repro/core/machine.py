@@ -25,7 +25,7 @@ All calibration constants live in :data:`CAL` and are documented there.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Sequence
+from typing import Dict, Optional, Sequence
 
 from .device import EGPUConfig, HOST
 from .ndrange import NDRange
@@ -176,27 +176,85 @@ def speedup(host: PhaseBreakdown, egpu: PhaseBreakdown) -> float:
     return host.total_s / egpu.total_s
 
 
-def fuse_breakdowns(stages: "Sequence[PhaseBreakdown]") -> PhaseBreakdown:
+def fuse_breakdowns(stages: "Sequence[PhaseBreakdown]",
+                    deps: "Optional[Sequence[Sequence[int]]]" = None
+                    ) -> PhaseBreakdown:
     """Model a fused (CommandGraph) launch of an already-costed kernel chain.
 
     The paper's §IV-B resident pipeline pays the Tiny-OpenCL startup +
     scheduling once per *chain*, not once per kernel: after the first launch
     the warps are active and the kernel-args region is hot, so subsequent
     stages chain without re-entering the scheduler.  Transfer and compute
-    phases are work, not overhead — they sum unchanged.  This mirrors the
-    TinyCL ``CommandGraph.launch`` path, which dispatches the whole chain as
-    one XLA computation.
+    phases are work, not overhead.  This mirrors the TinyCL
+    ``CommandGraph.launch`` path, which dispatches the whole chain as one
+    XLA computation.
+
+    Two modes:
+
+    * ``deps=None`` (chain): every stage is serially dependent — transfer
+      and compute sum unchanged.  All stages must share one frequency.
+    * ``deps`` given (DAG critical path): ``deps[i]`` lists the indices of
+      the stages node ``i`` waits on (an out-of-order queue's
+      ``wait_events`` + dataflow edges, as captured by
+      :class:`~repro.core.runtime.CommandGraph`).  Fused latency is the
+      longest dependency path — concurrent branches overlap instead of
+      summing.  A ``None`` entry in ``stages`` (a node with no machine
+      model) is a zero-cost pass-through on the path.  Stages may sit on
+      devices with different frequencies (host + e-GPU nodes in one
+      capture); phases are normalized to the fastest clock.
+
+    In both modes startup + scheduling are paid once (the max across
+    stages); for a linear chain the two modes agree exactly.
     """
-    stages = [s for s in stages if s is not None]
-    if not stages:
+    if deps is None:
+        stages = [s for s in stages if s is not None]
+        if not stages:
+            raise ValueError("fuse_breakdowns needs at least one PhaseBreakdown")
+        freq = stages[0].freq_hz
+        if any(s.freq_hz != freq for s in stages):
+            raise ValueError("cannot fuse breakdowns across devices/frequencies")
+        return PhaseBreakdown(
+            startup=max(s.startup for s in stages),
+            scheduling=max(s.scheduling for s in stages),
+            transfer=sum(s.transfer for s in stages),
+            compute=sum(s.compute for s in stages),
+            freq_hz=freq,
+        )
+
+    # --- DAG critical-path mode -------------------------------------------
+    stages = list(stages)
+    if len(deps) != len(stages):
+        raise ValueError(
+            f"deps must align with stages: {len(deps)} vs {len(stages)}")
+    modeled = [s for s in stages if s is not None]
+    if not modeled:
         raise ValueError("fuse_breakdowns needs at least one PhaseBreakdown")
-    freq = stages[0].freq_hz
-    if any(s.freq_hz != freq for s in stages):
-        raise ValueError("cannot fuse breakdowns across devices/frequencies")
+    freq = max(s.freq_hz for s in modeled)
+    n = len(stages)
+    finish = [0.0] * n                    # seconds: node ready time
+    path = [(0.0, 0.0)] * n               # (transfer, compute) ref-freq
+                                          # cycles along the best path
+    for i, (s, ds) in enumerate(zip(stages, deps)):
+        best_s, best_path = 0.0, (0.0, 0.0)
+        for d in ds:
+            if not 0 <= d < i:
+                raise ValueError(
+                    f"node {i} depends on node {d}: deps must reference "
+                    "earlier nodes (topological capture order)")
+            if finish[d] > best_s:
+                best_s, best_path = finish[d], path[d]
+        if s is None:
+            finish[i], path[i] = best_s, best_path
+            continue
+        scale = freq / s.freq_hz
+        t, c = s.transfer * scale, s.compute * scale
+        finish[i] = best_s + (t + c) / freq
+        path[i] = (best_path[0] + t, best_path[1] + c)
+    end = max(range(n), key=lambda i: finish[i])
     return PhaseBreakdown(
-        startup=max(s.startup for s in stages),
-        scheduling=max(s.scheduling for s in stages),
-        transfer=sum(s.transfer for s in stages),
-        compute=sum(s.compute for s in stages),
+        startup=max(s.startup * freq / s.freq_hz for s in modeled),
+        scheduling=max(s.scheduling * freq / s.freq_hz for s in modeled),
+        transfer=path[end][0],
+        compute=path[end][1],
         freq_hz=freq,
     )

@@ -50,9 +50,29 @@ Per-stage machine-model accounting is preserved: each captured node is
 costed from its recorded ``WorkCounts`` at capture time (the captured
 schedule), not from wall clock.
 
+Execution model — event-dependency DAGs (ISSUE 3)
+-------------------------------------------------
+
+Real OpenCL expresses parallelism through ``event_wait_list`` and
+out-of-order queues; TinyCL mirrors both:
+
+* ``CommandQueue(..., out_of_order=True)`` drops the implicit launch-order
+  chain — dependencies come only from ``enqueue_nd_range(...,
+  wait_events=[...])``, dataflow, and ``enqueue_barrier()`` points;
+  ``enqueue_marker()`` (clEnqueueMarkerWithWaitList) aggregates events.
+* A capture records these edges per node (``GraphNode.deps``), may span
+  *multiple* queues (``graph.join(host_queue)`` — host + e-GPU nodes in one
+  graph), and ``fused_modeled()`` reports the DAG's **critical path**:
+  concurrent branches overlap in the modeled latency instead of summing.
+* ``graph.launch(..., queue=...)`` binds the launch's events and modeled
+  totals to the *caller's* queue — a cached graph shared across serving
+  workers never books one worker's launch on another's history.
+
 Kernels are executed functionally (outputs are fresh buffers); this is the
 one semantic departure from OpenCL's in-place buffer writes and is what makes
-every kernel jit/grad/vmap-compatible.
+every kernel jit/grad/vmap-compatible.  Out-of-order execution therefore
+can never change functional results — ordering is a synchronization and
+machine-model contract.
 """
 
 from __future__ import annotations
@@ -150,12 +170,16 @@ class Event:
 
     def __init__(self, kernel: Kernel, outputs: Tuple[Buffer, ...],
                  modeled: Optional[PhaseBreakdown], energy_j: Optional[float],
-                 dispatch_s: float):
+                 dispatch_s: float, deps: Tuple["Event", ...] = ()):
         self.kernel = kernel
         self.outputs = outputs
         self.modeled = modeled
         self.energy_j = energy_j
         self.dispatch_s = dispatch_s
+        #: events this one waits on (explicit ``wait_events`` plus the
+        #: in-order queue's implicit predecessor); cleared once realized or
+        #: released so a long-lived queue never chains its whole history
+        self.deps = tuple(deps)
         self._done = False
         self._refcount = 1
 
@@ -189,12 +213,33 @@ class Event:
         self._refcount -= 1
         if self._refcount == 0:
             self.outputs = ()
+            self.deps = ()
 
     def wait(self) -> Tuple[Buffer, ...]:
-        for b in self.outputs:
-            if isinstance(b.data, jax.Array):
-                b.data.block_until_ready()
-        self._done = True
+        """Block until this event (and its dependencies) completed.
+
+        Waiting a *released* event is loud (``RuntimeError``), matching
+        :meth:`retain` — the outputs are gone, so a silent empty return
+        would hide a use-after-release bug.
+        """
+        if self.released:
+            raise RuntimeError("cannot wait a released Event")
+        # Iterative traversal: a long in-order chain of implicit deps must
+        # not overflow the stack; already-realized or released deps prune.
+        stack, seen, pending = [self], set(), []
+        while stack:
+            ev = stack.pop()
+            if id(ev) in seen or ev._done or ev.released:
+                continue
+            seen.add(id(ev))
+            pending.append(ev)
+            stack.extend(ev.deps)
+        for ev in pending:                 # realization order is immaterial:
+            for b in ev.outputs:           # each blocks until its own work
+                if isinstance(b.data, jax.Array):
+                    b.data.block_until_ready()
+            ev._done = True
+            ev.deps = ()                   # realized: drop the chain refs
         return self.outputs
 
 
@@ -205,13 +250,30 @@ def _static_signature(params: Dict[str, Any]) -> Tuple[str, ...]:
         if not isinstance(v, (jax.Array, jnp.ndarray))))
 
 
+#: sentinel kernel for marker/barrier events (clEnqueueMarkerWithWaitList /
+#: clEnqueueBarrierWithWaitList) — never executed, carries no cost model
+_MARKER = Kernel(name="marker", executor=lambda: ())
+
+
 class CommandQueue:
-    """An in-order command queue bound to one device.
+    """A command queue bound to one device.
 
     ``blocking=False`` (default) gives asynchronous OpenCL semantics: enqueue
     returns immediately and only ``Event.wait()`` / :meth:`finish`
     synchronize.  ``blocking=True`` restores eager-sync dispatch (one device
     round-trip per kernel) for overhead A/B comparisons.
+
+    Ordering (``out_of_order``): an in-order queue (default) implicitly
+    chains every launch after the previous one, exactly OpenCL's default
+    queue semantics.  ``out_of_order=True`` is the
+    ``CL_QUEUE_OUT_OF_ORDER_EXEC_MODE_ENABLE`` analogue: launches carry NO
+    implicit ordering — dependencies come only from explicit
+    ``wait_events=`` lists, dataflow (consuming a prior event's output
+    buffers), and :meth:`enqueue_barrier` points.  Two launches with neither
+    are *unordered* (concurrent in the machine model's critical path).
+    Kernels are pure functions, so out-of-order execution can never change
+    functional results — ordering is a synchronization and *modeling*
+    contract, which :class:`CommandGraph` captures as a dependency DAG.
 
     Event lifecycle (serving workloads): an unprofiled queue auto-releases
     its events on :meth:`finish` — nobody can need them for accounting, so
@@ -225,13 +287,16 @@ class CommandQueue:
     """
 
     def __init__(self, ctx: Context, profile: bool = True,
-                 blocking: bool = False, max_events: Optional[int] = None):
+                 blocking: bool = False, max_events: Optional[int] = None,
+                 out_of_order: bool = False):
         if max_events is not None and max_events < 0:
             raise ValueError("max_events must be None or >= 0")
         self.ctx = ctx
         self.profile = profile
         self.blocking = blocking
         self.max_events = max_events
+        self.out_of_order = out_of_order
+        self._barrier: Optional[Event] = None   # latest eager barrier event
         self._events: List[Event] = []
         self._drained = 0              # finish() watermark: events before
                                        # this index are already waited
@@ -273,30 +338,66 @@ class CommandQueue:
         modeled = egpu_time(cfg, counts, ndr)
         return modeled, egpu_energy_j(cfg, modeled)
 
+    def _check_wait_events(self, wait_events: Optional[Sequence[Event]]
+                           ) -> Tuple[Event, ...]:
+        evs = tuple(wait_events or ())
+        for ev in evs:
+            if not isinstance(ev, Event):
+                raise TypeError(
+                    f"wait_events must contain Events, got "
+                    f"{type(ev).__name__}")
+            if ev.released:
+                raise RuntimeError(
+                    "wait_events contains a released Event (use-after-"
+                    "release)")
+            if (self._capture is None
+                    and getattr(ev, "_graph", None) is not None):
+                raise RuntimeError(
+                    "wait_events contains a capture-time Event; an eager "
+                    "command can only wait events of executed launches")
+        return evs
+
+    def _implicit_deps(self) -> Tuple[Event, ...]:
+        """The queue's implicit ordering edge for the next eager launch."""
+        if not self.out_of_order:
+            prev = self._events[-1] if self._events else None
+            return (prev,) if prev is not None and not prev.released else ()
+        if self._barrier is not None and not self._barrier.released:
+            return (self._barrier,)
+        return ()
+
     # -- the OpenCL-subset entry point -------------------------------------
     def enqueue_nd_range(self, kernel: Kernel, ndr: NDRange,
                          args: Sequence[Buffer],
                          params: Optional[Dict[str, Any]] = None,
                          counts_params: Optional[Dict[str, Any]] = None,
+                         wait_events: Optional[Sequence[Event]] = None,
                          _resident: bool = False) -> Event:
         """Launch ``kernel`` over ``ndr`` with buffer ``args`` (non-blocking).
 
         ``params`` are executor kwargs (the paper's kernel-args region);
         ``counts_params`` are the problem sizes handed to the kernel's
         ``counts()`` for the machine model (defaults to ``params``).
+        ``wait_events`` is the OpenCL ``event_wait_list``: events this
+        launch must observe beyond its dataflow inputs.  On an in-order
+        queue it adds edges on top of the implicit chain; on an
+        ``out_of_order`` queue it is the ONLY explicit ordering (launches
+        with no wait list and no dataflow link stay unordered).
         ``_resident=True`` marks a stage whose inputs are already resident
         in the unified memory / D$ (paper §IV-B pipeline chaining): the
         modeled host<->D$ transfer is waived for it.
 
         Inside a :meth:`capture` block the launch is recorded into the
         active :class:`CommandGraph` instead of executed; the returned
-        event carries symbolic :class:`GraphBuffer` outputs.
+        event carries symbolic :class:`GraphBuffer` outputs and the
+        dependency edges become graph nodes' ``deps``.
         """
         params = params or {}
         cp = counts_params if counts_params is not None else params
+        waits = self._check_wait_events(wait_events)
         if self._capture is not None:
-            return self._capture._record(kernel, ndr, args, params, cp,
-                                         _resident)
+            return self._capture._record(self, kernel, ndr, args, params, cp,
+                                         _resident, waits)
         fn = self._executor_for(kernel, params)
         t0 = time.perf_counter()
         raw = fn(*[b.data for b in args], **params)
@@ -306,10 +407,63 @@ class CommandQueue:
         outs = tuple(Buffer(r) for r in (raw if isinstance(raw, tuple) else (raw,)))
 
         modeled, energy = self._model(kernel, ndr, cp, _resident)
-        ev = Event(kernel, outs, modeled, energy, dispatch)
+        deps = waits + self._implicit_deps()
+        # Dataflow edges, mirroring capture's slot-producer tracking:
+        # consuming another launch's output buffer is an ordering edge even
+        # on an out-of-order queue (and across queues), so wait() realizes
+        # the producer's done-flag transitively.
+        for b in args:
+            producer = getattr(b, "_event", None)
+            if (producer is not None and not producer._done
+                    and not producer.released and producer not in deps):
+                deps += (producer,)
+        ev = Event(kernel, outs, modeled, energy, dispatch, deps=deps)
+        for b in outs:
+            b._event = ev
         if self.blocking:
             ev._done = True
+            ev.deps = ()
         self._events.append(ev)
+        return ev
+
+    # -- synchronization commands ------------------------------------------
+    def enqueue_marker(self, wait_events: Optional[Sequence[Event]] = None
+                       ) -> Event:
+        """clEnqueueMarkerWithWaitList: an event completing once
+        ``wait_events`` (default: everything enqueued on this queue so far)
+        have completed.  Carries no cost model and no outputs."""
+        return self._enqueue_sync(wait_events, barrier=False)
+
+    def enqueue_barrier(self, wait_events: Optional[Sequence[Event]] = None
+                        ) -> Event:
+        """clEnqueueBarrierWithWaitList: like :meth:`enqueue_marker`, but
+        also an ordering point — every *subsequent* launch on an
+        ``out_of_order`` queue implicitly depends on it (in-order queues
+        already chain, so there it only returns the aggregate event)."""
+        return self._enqueue_sync(wait_events, barrier=True)
+
+    def _enqueue_sync(self, wait_events: Optional[Sequence[Event]],
+                      barrier: bool) -> Event:
+        # OpenCL: an empty wait list means "all previously enqueued
+        # commands", same as passing none at all.
+        waits = self._check_wait_events(wait_events) or None
+        if self._capture is not None:
+            return self._capture._record_sync(self, waits, barrier)
+        if waits:
+            # The queue's ordering rules still apply to the marker itself
+            # (in-order: chained after the previous command; out-of-order:
+            # after the latest barrier).
+            deps = waits + self._implicit_deps()
+        else:
+            # Events before the finish()/drain() watermark are already
+            # realized and contribute nothing — snapshotting them would
+            # make each marker O(history) on a long-lived profiled queue.
+            deps = tuple(e for e in self._events[self._drained:]
+                         if not e.released)
+        ev = Event(_MARKER, (), None, None, 0.0, deps=deps)
+        self._events.append(ev)
+        if barrier:
+            self._barrier = ev
         return ev
 
     # -- graph capture ------------------------------------------------------
@@ -340,7 +494,8 @@ class CommandQueue:
         events are then released outright; with ``max_events`` set, the
         retained history is trimmed to the window (oldest first)."""
         for ev in self._events[self._drained:]:
-            ev.wait()
+            if not ev.released:            # user-released mid-history: the
+                ev.wait()                  # outputs are gone, nothing to wait
         self._drained = len(self._events)
         if not self.profile:
             self.release_events()
@@ -351,12 +506,16 @@ class CommandQueue:
     def drain(self, n: int) -> None:
         """Wait the oldest ``n`` retained events (a *partial* clFinish).
 
-        Lets a serving layer retire one launch's event segment without
+        Starts at the ``finish()`` watermark — events a previous drain
+        already realized are never re-waited, so repeated partial drains on
+        a long-lived queue stay O(new work), not O(history).  Lets a
+        serving layer retire one launch's event segment without
         synchronizing launches enqueued after it — pair with
         ``release_events(upto=n)`` to drop exactly that segment."""
         n = min(n, len(self._events))
-        for ev in self._events[:n]:
-            ev.wait()
+        for ev in self._events[self._drained:n]:
+            if not ev.released:
+                ev.wait()
         self._drained = max(self._drained, n)
 
     def release_events(self, upto: Optional[int] = None) -> int:
@@ -419,26 +578,47 @@ class GraphNode:
     energy_j: Optional[float]
     n_items: int = 0                    # first input's element count (the
                                         # NDRange sizing the eager path uses)
+    #: indices of earlier nodes this one depends on (dataflow slots +
+    #: wait_events + the enqueueing queue's ordering rules) — the edges of
+    #: the event-dependency DAG the critical-path model walks
+    deps: Tuple[int, ...] = ()
 
 
 class CommandGraph:
-    """A captured kernel chain, launched as one fused XLA computation.
+    """A captured kernel DAG, launched as one fused XLA computation.
 
     Built by :meth:`CommandQueue.capture`.  While capturing, every
     ``enqueue_nd_range`` appends a :class:`GraphNode`: inputs are resolved to
     *slots* — either graph-external buffers (concrete data seen during
     capture) or earlier nodes' outputs — and output shapes come from
-    ``jax.eval_shape``, so nothing executes.  :meth:`launch` replays all
-    nodes inside a single ``jax.jit``; the graph's outputs are the final
-    node's outputs.
+    ``jax.eval_shape``, so nothing executes.  Each node also records its
+    dependency edges: dataflow (consuming an earlier node's output slot),
+    explicit ``wait_events``, and the enqueueing queue's ordering rules
+    (implicit chaining on in-order queues, barrier frontiers on out-of-order
+    ones).  Markers and barriers are recorded as zero-cost, output-less
+    nodes, so OpenCL's transitive ordering falls out of the DAG structure.
+    :meth:`join` records enqueues from *additional* queues (e.g. the
+    host's) into the same capture, so one graph can hold host + e-GPU nodes
+    with cross-queue event edges.
+
+    :meth:`launch` replays all nodes inside a single ``jax.jit``; the
+    graph's outputs are the final kernel node's outputs.  Launches bind to the
+    *caller's* queue (``launch(..., queue=...)``): events and modeled
+    totals land on the queue that launched, not the one that captured —
+    a cached graph shared by several serving workers keeps every worker's
+    accounting separate.
 
     Per-node ``modeled`` / ``energy_j`` come from the captured schedule
-    (``WorkCounts`` at capture time), giving the same per-stage Fig-3/Fig-4
-    accounting as eager dispatch while the wall-clock path is fused.
+    (``WorkCounts`` at capture time) on the enqueueing queue's device,
+    giving the same per-stage Fig-3/Fig-4 accounting as eager dispatch
+    while the wall-clock path is fused; :meth:`fused_modeled` walks the
+    dependency DAG's critical path, so concurrent branches overlap instead
+    of summing.
     """
 
     def __init__(self, queue: CommandQueue):
-        self.queue = queue
+        self.queue = queue                     # home queue: default binding
+        self.queues: List[CommandQueue] = [queue]
         self.nodes: List[GraphNode] = []
         self._n_slots = 0
         self._ext_slots: List[int] = []        # slot index of each external
@@ -446,6 +626,10 @@ class CommandGraph:
         self._ext_avals: List[jax.ShapeDtypeStruct] = []
         self._buf_slot: Dict[int, int] = {}    # id(Buffer) -> slot
         self._bufs_alive: List[Buffer] = []    # keep ids stable during capture
+        self._slot_producer: Dict[int, int] = {}   # slot -> producing node
+        self._queue_nodes: Dict[int, List[int]] = {}   # id(queue) -> nodes
+        self._last_node: Dict[int, int] = {}   # id(queue) -> last node idx
+        self._barrier_node: Dict[int, int] = {}  # out-of-order barrier point
         self._jit_cache: Dict[Tuple[Any, ...], Callable] = {}
         self._sealed = False
         self._fused_memo: Optional[Tuple[Optional[PhaseBreakdown], float]] = None
@@ -458,10 +642,30 @@ class CommandGraph:
         return self
 
     def __exit__(self, exc_type, exc, tb) -> None:
-        self.queue._capture = None
+        for q in self.queues:                  # joined queues too
+            if q._capture is self:
+                q._capture = None
         # Only a capture body that completed cleanly yields a launchable
         # graph; an exception mid-capture leaves a truncated chain.
         self._sealed = exc_type is None
+
+    def join(self, queue: CommandQueue) -> "_GraphJoin":
+        """Record enqueues on another queue into this capture.
+
+        Use as a context manager *inside* the capture block to build a
+        multi-queue graph (host + e-GPU nodes in one capture)::
+
+            with egpu_q.capture() as graph:
+                pre = egpu_q.enqueue_nd_range(k_pre, ndr, (a,))
+                with graph.join(host_q):
+                    post = host_q.enqueue_nd_range(k_post, ndr_h, pre.outputs,
+                                                   wait_events=[pre])
+
+        Each node is costed with its *own* queue's device model (the host
+        node above uses the scalar-host machine model), and cross-queue
+        ``wait_events`` become ordinary DAG edges.
+        """
+        return _GraphJoin(self, queue)
 
     def _slot_of(self, buf: Buffer) -> int:
         slot = self._buf_slot.get(id(buf))
@@ -483,9 +687,20 @@ class CommandGraph:
         self._n_slots += 1
         return s
 
-    def _record(self, kernel: Kernel, ndr: NDRange, args: Sequence[Buffer],
-                params: Dict[str, Any], counts_params: Dict[str, Any],
-                resident: bool) -> Event:
+    def _dep_nodes_of(self, ev: Event) -> frozenset:
+        """Node indices an event stands for (capture-time events only)."""
+        nodes = getattr(ev, "_dep_nodes", None)
+        if nodes is None or getattr(ev, "_graph", None) is not self:
+            raise RuntimeError(
+                "wait_events during capture must be events returned by this "
+                "capture (eager or foreign-graph events have no node "
+                "identity here)")
+        return nodes
+
+    def _record(self, queue: CommandQueue, kernel: Kernel, ndr: NDRange,
+                args: Sequence[Buffer], params: Dict[str, Any],
+                counts_params: Dict[str, Any], resident: bool,
+                wait_events: Tuple[Event, ...] = ()) -> Event:
         in_slots = tuple(self._slot_of(b) for b in args)
         in_avals = tuple(
             jax.ShapeDtypeStruct(b.data.shape, b.data.dtype) for b in args)
@@ -496,17 +711,91 @@ class CommandGraph:
 
         out_avals = tuple(jax.eval_shape(call, *in_avals))
         out_slots = tuple(self._new_slot() for _ in out_avals)
-        modeled, energy = self.queue._model(kernel, ndr, counts_params,
-                                            resident)
-        self.nodes.append(GraphNode(kernel, call, in_slots, out_slots,
-                                    out_avals, modeled, energy,
-                                    n_items=int(args[0].data.size)
-                                    if args else 0))
+        # Cost the node on the ENQUEUEING queue's device: a multi-queue
+        # capture mixes host and e-GPU nodes, each with its own model.
+        modeled, energy = queue._model(kernel, ndr, counts_params, resident)
+
+        # Dependency edges: dataflow + wait_events + queue ordering.
+        deps = set()
+        for s in in_slots:
+            producer = self._slot_producer.get(s)
+            if producer is not None:
+                deps.add(producer)
+        for ev in wait_events:
+            deps.update(self._dep_nodes_of(ev))
+        deps.update(self._queue_order_deps(queue))
+        idx = self._append_node(
+            queue, GraphNode(kernel, call, in_slots, out_slots,
+                             out_avals, modeled, energy,
+                             n_items=int(args[0].data.size) if args else 0,
+                             deps=tuple(sorted(deps))))
+        for s in out_slots:
+            self._slot_producer[s] = idx
         outs = tuple(GraphBuffer(a, s) for a, s in zip(out_avals, out_slots))
         for b in outs:
             self._buf_slot[id(b)] = b.slot
             self._bufs_alive.append(b)
-        return Event(kernel, outs, modeled, energy, 0.0)
+        ev = Event(kernel, outs, modeled, energy, 0.0)
+        ev._graph = self
+        ev._dep_nodes = frozenset((idx,))
+        return ev
+
+    def _queue_order_deps(self, queue: CommandQueue) -> Tuple[int, ...]:
+        """The enqueueing queue's implicit ordering edge for the next node:
+        its previous command (in-order) or its latest barrier node
+        (out-of-order).  One edge — earlier constraints flow transitively
+        through the chain / barrier nodes."""
+        qid = id(queue)
+        if not queue.out_of_order:
+            last = self._last_node.get(qid)
+            return () if last is None else (last,)
+        bar = self._barrier_node.get(qid)
+        return () if bar is None else (bar,)
+
+    def _append_node(self, queue: CommandQueue, node: GraphNode) -> int:
+        qid = id(queue)
+        idx = len(self.nodes)
+        self.nodes.append(node)
+        self._queue_nodes.setdefault(qid, []).append(idx)
+        self._last_node[qid] = idx
+        return idx
+
+    def _record_sync(self, queue: CommandQueue,
+                     wait_events: Optional[Tuple[Event, ...]],
+                     barrier: bool) -> Event:
+        """Capture-time marker/barrier: a zero-cost :class:`GraphNode`.
+
+        Recording sync commands as real (modeled-``None``, output-less)
+        nodes makes OpenCL's transitivity structural: a later marker's
+        default wait list ("all previously enqueued commands") includes
+        earlier sync nodes and hence — through THEIR edges — cross-queue
+        dependencies; a new barrier chains to the previous barrier node, so
+        every earlier barrier's constraint keeps reaching later launches
+        with O(1) edges per node.  The critical-path model treats them as
+        zero-cost pass-throughs."""
+        qid = id(queue)
+        deps = set(self._queue_order_deps(queue))
+        if not wait_events:
+            # None or empty: all commands enqueued on this queue so far
+            # (sync nodes included — that's what carries transitivity).
+            deps.update(self._queue_nodes.get(qid, ()))
+        else:
+            # _queue_order_deps already chained this command after the
+            # queue's latest barrier (out-of-order) or predecessor
+            # (in-order), so an earlier barrier's constraint persists
+            # alongside the explicit list.
+            for e in wait_events:
+                deps.update(self._dep_nodes_of(e))
+        idx = self._append_node(
+            queue, GraphNode(_MARKER, lambda: (), (), (), (),
+                             None, None, n_items=0,
+                             deps=tuple(sorted(deps))))
+        if barrier:
+            self._barrier_node[qid] = idx
+        ev = Event(_MARKER, (), None, None, 0.0)
+        ev._graph = self
+        ev._dep_nodes = frozenset((idx,))
+        return ev
 
     # -- accounting ---------------------------------------------------------
     @property
@@ -521,6 +810,10 @@ class CommandGraph:
     def modeled_breakdowns(self) -> Tuple[Optional[PhaseBreakdown], ...]:
         return tuple(n.modeled for n in self.nodes)
 
+    def node_deps(self) -> Tuple[Tuple[int, ...], ...]:
+        """Per-node dependency edges (indices into :attr:`nodes`)."""
+        return tuple(n.deps for n in self.nodes)
+
     def total_modeled_s(self) -> float:
         return sum(n.modeled.total_s for n in self.nodes
                    if n.modeled is not None)
@@ -529,17 +822,24 @@ class CommandGraph:
         return sum(n.energy_j for n in self.nodes if n.energy_j is not None)
 
     def fused_modeled(self) -> Tuple[Optional[PhaseBreakdown], float]:
-        """(fused breakdown, total energy) of the captured chain, memoized.
+        """(fused breakdown, total energy) of the captured DAG, memoized.
 
-        Both come from capture time and never change across launches — the
-        serving hot path reads them once per launch, so re-walking the node
-        list every time would be pure waste.  The breakdown is ``None`` when
-        no node carries a machine model.
+        The breakdown is the *critical path* through the dependency DAG
+        (:func:`~repro.core.machine.fuse_breakdowns` with ``deps``):
+        concurrent branches of an out-of-order capture overlap instead of
+        summing, while a linear in-order chain reproduces the classic
+        chain fusion exactly.  Energy is total work — it sums over every
+        node regardless of concurrency.  Both come from capture time and
+        never change across launches — the serving hot path reads them
+        once per launch, so re-walking the node list every time would be
+        pure waste.  The breakdown is ``None`` when no node carries a
+        machine model.
         """
         if self._fused_memo is None:
-            mods = [m for m in self.modeled_breakdowns() if m is not None]
-            self._fused_memo = (fuse_breakdowns(mods) if mods else None,
-                                self.total_energy_j())
+            mods = self.modeled_breakdowns()
+            fused = (fuse_breakdowns(mods, deps=self.node_deps())
+                     if any(m is not None for m in mods) else None)
+            self._fused_memo = (fused, self.total_energy_j())
         return self._fused_memo
 
     # -- launch -------------------------------------------------------------
@@ -551,7 +851,9 @@ class CommandGraph:
 
         nodes = tuple(self.nodes)
         ext_slots = tuple(self._ext_slots)
-        out_slots = nodes[-1].out_slots
+        # Outputs come from the last node that HAS any — a trailing
+        # marker/barrier (zero-cost, output-less) must not eat them.
+        out_slots = next(n.out_slots for n in reversed(nodes) if n.out_slots)
         n_slots = self._n_slots
 
         def run(*ext):
@@ -569,7 +871,8 @@ class CommandGraph:
         return fn
 
     def launch(self, *inputs: Any, donate: Sequence[int] = (),
-               queue_events: bool = True) -> Tuple[Buffer, ...]:
+               queue_events: bool = True,
+               queue: Optional[CommandQueue] = None) -> Tuple[Buffer, ...]:
         """Execute the captured chain as one fused dispatch (non-blocking).
 
         ``inputs`` replace the graph's external buffers in capture order
@@ -578,18 +881,28 @@ class CommandGraph:
         whose device buffers XLA may reuse for the computation (jit
         ``donate_argnums``); never pass an index whose buffer the caller
         still needs.  Backends without donation support (CPU) silently
-        ignore it.  Returns the final node's outputs as fresh buffers;
-        per-node modeled events are appended to the owning queue so
-        ``finish()`` / modeled totals keep working.
+        ignore it.  Returns the final node's outputs as fresh buffers.
+
+        **Launch-time queue binding**: per-node modeled events are appended
+        to ``queue`` — the *caller's* queue — defaulting to the capture
+        queue for one-shot use.  A cached graph launched by several
+        workers therefore books each launch's events and modeled totals on
+        the launching worker's own queue; nothing ever lands on a sibling's
+        history.  The binding queue owns the WHOLE launch: for a
+        multi-queue graph (:meth:`join`) the joined queues' nodes are
+        booked there too — per-queue totals are per *launching* queue, not
+        per device; read :meth:`modeled_breakdowns` for the per-node /
+        per-device split.
         """
-        if self.queue._capture is self:
+        if any(q._capture is self for q in self.queues):
             raise RuntimeError("cannot launch while still capturing")
         if not self._sealed:
             raise RuntimeError(
                 "capture did not complete cleanly; re-capture the chain "
                 "before launching")
-        if not self.nodes:
-            raise RuntimeError("cannot launch an empty CommandGraph")
+        if not any(n.out_slots for n in self.nodes):
+            raise RuntimeError(
+                "cannot launch an empty CommandGraph (no kernel nodes)")
         if donate and not inputs:
             # Donating the graph's own captured arrays would poison every
             # later zero-argument launch on backends that honor donation.
@@ -621,12 +934,20 @@ class CommandGraph:
         dispatch = time.perf_counter() - t0
         outs = tuple(Buffer(r) for r in raw)
         if queue_events:
+            target = queue if queue is not None else self.queue
+            # Outputs belong to the node that produced them — the last
+            # KERNEL node, not a trailing marker/barrier (mirrors _fused).
+            last_kernel = max(i for i, n in enumerate(self.nodes)
+                              if n.out_slots)
             for i, node in enumerate(self.nodes):
-                node_outs = outs if i == len(self.nodes) - 1 else ()
+                node_outs = outs if i == last_kernel else ()
                 per_node = dispatch if i == 0 else 0.0
-                self.queue._events.append(Event(
-                    node.kernel, node_outs, node.modeled, node.energy_j,
-                    per_node))
+                ev = Event(node.kernel, node_outs, node.modeled,
+                           node.energy_j, per_node)
+                target._events.append(ev)
+                if i == last_kernel:
+                    for b in outs:       # dataflow edge for later eager
+                        b._event = ev    # consumers, same as enqueue
         return outs
 
     def launch_prefix(self, inputs: Sequence[Any],
@@ -637,7 +958,9 @@ class CommandGraph:
         for a pipeline graph these are the per-stage constant buffers
         (weights, coefficients), so a serving layer can feed fresh request
         data without re-threading the pipeline's parameters (this is the
-        entry point ``repro.serve.GraphCache`` launches through).
+        entry point ``repro.serve.GraphCache`` launches through).  Pass
+        ``queue=`` to bind the launch's events and modeled totals to the
+        caller's queue (see :meth:`launch`).
         """
         inputs = list(inputs)
         if len(inputs) > len(self._ext_values):
@@ -655,6 +978,34 @@ class CommandGraph:
                 f"(< {len(inputs)}); the rest are captured externals")
         return self.launch(*inputs, *self._ext_values[len(inputs):],
                            **launch_kwargs)
+
+
+class _GraphJoin:
+    """Context manager adding a second queue to an active capture."""
+
+    def __init__(self, graph: CommandGraph, queue: CommandQueue):
+        self._graph = graph
+        self._queue = queue
+        self._attached = False
+
+    def __enter__(self) -> CommandGraph:
+        graph, queue = self._graph, self._queue
+        if graph.queue._capture is not graph:
+            raise RuntimeError("join() is only valid inside an active capture")
+        if queue._capture is not None and queue._capture is not graph:
+            raise RuntimeError("queue is already capturing another graph")
+        # Only detach on exit what THIS join attached: joining a queue that
+        # is already capturing the graph (the capture's own queue, or a
+        # nested join) must not end its capture when the inner block closes.
+        self._attached = queue._capture is None
+        queue._capture = graph
+        if all(q is not queue for q in graph.queues):
+            graph.queues.append(queue)
+        return graph
+
+    def __exit__(self, exc_type, exc, tb) -> None:
+        if self._attached and self._queue._capture is self._graph:
+            self._queue._capture = None
 
 
 class Device:

@@ -74,9 +74,13 @@ class MicroBatch:
 
         Every output is expected to carry the batch on axis 0; the request's
         ``pad_axis`` (an axis of the *un-batched* row, so axis ``pad_axis``
-        of ``row = out[i]``) is cropped back to the first input's true
-        length when the output kept the padded extent, else returned whole
-        (reduced outputs).
+        of ``row = out[i]``) is cropped back to its true length when the
+        output kept the padded extent, else returned whole (reduced
+        outputs).  ``ServeRequest.lengths`` has one entry per request
+        *array*: output ``j`` crops against input ``j``'s true length and
+        padded extent (pipelines emitting one output per input — the
+        multi-input case where extents differ), with extra outputs falling
+        back to the first input's.
 
         Caveat: "kept the padded extent" is detected by shape — an output
         dimension that *coincidentally* equals the bucket size (a fixed
@@ -90,20 +94,27 @@ class MicroBatch:
                           for o in outputs)
                     for i in range(len(self.requests))]
         ax = self.pad_axis
-        padded_len = (self.inputs[0].shape[ax + 1]
-                      if self.inputs and self.inputs[0].ndim > ax + 1
-                      else None)
+
+        def padded_len(j: int) -> Optional[int]:
+            src = self.inputs[j if j < len(self.inputs) else 0] \
+                if self.inputs else None
+            return (src.shape[ax + 1]
+                    if src is not None and src.ndim > ax + 1 else None)
+
         per_request: List[Tuple[jax.Array, ...]] = []
         for i, req in enumerate(self.requests):
             rows = []
-            for out in outputs:
+            for j, out in enumerate(outputs):
                 arr = out.data if hasattr(out, "data") else out
                 row = arr[i]
-                if (row.ndim > ax and req.lengths and padded_len is not None
-                        and row.shape[ax] == padded_len
-                        and row.shape[ax] >= req.lengths[0]):
+                length = (req.lengths[j if j < len(req.lengths) else 0]
+                          if req.lengths else None)
+                padded = padded_len(j)
+                if (length is not None and padded is not None
+                        and row.ndim > ax and row.shape[ax] == padded
+                        and row.shape[ax] >= length):
                     sl = [slice(None)] * row.ndim
-                    sl[ax] = slice(0, req.lengths[0])
+                    sl[ax] = slice(0, length)
                     row = row[tuple(sl)]
                 rows.append(row)
             per_request.append(tuple(rows))

@@ -151,9 +151,13 @@ class GraphCache:
 
     One cache may be shared across several :class:`APU`\\ s with different
     ``EGPUConfig`` presets — the config is part of the key, so a 16T graph
-    can never be served to an 8T device.  ``capacity`` bounds the number of
-    resident graphs (each holds its jitted executable and captured
-    constants); the least-recently-used entry is evicted first.
+    can never be served to an 8T device.  Same-config callers genuinely
+    *share* an entry; that is safe for accounting because launches bind to
+    the caller's queue (``graph.launch(..., queue=...)``), so the shared
+    graph's capture queue never accumulates anyone's launch events.
+    ``capacity`` bounds the number of resident graphs (each holds its
+    jitted executable and captured constants); the least-recently-used
+    entry is evicted first.
     """
 
     def __init__(self, capacity: int = 32):

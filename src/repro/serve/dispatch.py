@@ -9,10 +9,17 @@ credit-based backpressure, keeping queue memory and latency bounded), and
 rolls per-queue machine-model totals up for the
 :class:`~repro.serve.server.ServeReport`.
 
-Workers retire tickets through the Event-lifecycle API: after a ticket's
-outputs are realized, ``queue.finish()`` + ``queue.release_events()`` return
-the graph's queue to O(in-flight) memory while the released events' modeled
-time/energy stay in the queue's running totals.
+Every worker owns its :class:`~repro.core.runtime.CommandQueue` (the APU's)
+and launches cached graphs with launch-time queue binding
+(``graph.launch_prefix(..., queue=worker.queue)``), so a
+:class:`~repro.serve.cache.GraphCache` entry shared by several same-config
+workers books each launch's events and modeled totals on the launching
+worker's queue only — per-queue accounting is exact by construction, not by
+coincidence.  Workers retire tickets through the Event-lifecycle API: after
+a ticket's outputs are realized, ``queue.drain(n)`` +
+``queue.release_events(upto=n)`` return the worker's queue to O(in-flight)
+memory while the released events' modeled time/energy stay in the queue's
+running totals.
 """
 
 from __future__ import annotations
@@ -43,7 +50,8 @@ class LaunchTicket:
     energy_j: float
     t_launch: float
     t_done: Optional[float] = None
-    #: events this launch appended to its graph's queue (one per node)
+    #: events this launch appended to the launching worker's queue (one per
+    #: node — launch-time binding, never the graph's capture queue)
     n_events: int = 0
 
     @property
@@ -69,9 +77,12 @@ class QueueWorker:
         if max_in_flight < 1:
             raise ValueError("max_in_flight must be >= 1")
         self.apu = APU(config)
+        #: this worker's own command queue — every launch binds its events
+        #: and modeled totals here, never to a cached graph's capture queue
+        self.queue = self.apu.queue
         self.name = name or config.name
         self.max_in_flight = max_in_flight
-        self._inflight: List[Tuple[LaunchTicket, CommandGraph]] = []
+        self._inflight: List[LaunchTicket] = []
         # accounting
         self.n_batches = 0
         self.n_requests = 0
@@ -93,13 +104,13 @@ class QueueWorker:
         while len(self._inflight) >= self.max_in_flight:
             self.backpressure_stalls += 1
             retired.append(self._retire_oldest())
-        outs = graph.launch_prefix(batch.inputs)
+        outs = graph.launch_prefix(batch.inputs, queue=self.queue)
         fused, energy = graph.fused_modeled()   # memoized: launch-invariant
         ticket = LaunchTicket(batch=batch, outputs=outs, worker=self,
                               fused=fused, energy_j=energy,
                               t_launch=time.perf_counter(),
                               n_events=len(graph.nodes))
-        self._inflight.append((ticket, graph))
+        self._inflight.append(ticket)
         self.peak_in_flight = max(self.peak_in_flight, len(self._inflight))
         self.n_batches += 1
         self.n_requests += batch.n_requests
@@ -109,18 +120,16 @@ class QueueWorker:
         return ticket, retired
 
     def _retire_oldest(self) -> LaunchTicket:
-        ticket, graph = self._inflight.pop(0)
+        ticket = self._inflight.pop(0)
         for b in ticket.outputs:
             if isinstance(b.data, jax.Array):
                 b.data.block_until_ready()
-        # Release exactly this launch's event segment.  Tickets on one
-        # graph retire oldest-first, so the segment sits at the queue head;
-        # a partial drain never synchronizes launches enqueued after it.
-        # (When same-config workers share a cached graph, head segments can
-        # belong to a sibling's equal-length launch — counts and totals
-        # stay exact either way, and ticket outputs hold their own buffers.)
-        graph.queue.drain(ticket.n_events)
-        graph.queue.release_events(upto=ticket.n_events)
+        # Release exactly this launch's event segment.  Every launch binds
+        # to THIS worker's queue and tickets retire oldest-first, so the
+        # segment at the queue head is this ticket's own — even when the
+        # graph itself is a cached entry shared with sibling workers.
+        self.queue.drain(ticket.n_events)
+        self.queue.release_events(upto=ticket.n_events)
         ticket.t_done = time.perf_counter()
         return ticket
 

@@ -369,7 +369,9 @@ def test_dispatcher_balances_and_bounds_in_flight():
 
 def test_retire_releases_only_own_event_segment():
     """Retiring the oldest of two in-flight launches on ONE cached graph
-    must not drain or release the newer launch's events."""
+    must not drain or release the newer launch's events — and every event
+    lives on the WORKER's queue (launch-time binding), never on the cached
+    graph's capture queue."""
     stages = _mm_stages(n=2)
     srv = Server(stages, workers=(EGPU_16T,), bucket_sizes=(8,),
                  max_batch=1, max_in_flight=2)
@@ -381,11 +383,13 @@ def test_retire_releases_only_own_event_segment():
     retired = worker._retire_oldest()
     assert retired.n_events == 2
     # exactly one launch's segment released; the in-flight one retained
-    graph = worker._inflight[0][1]
-    assert graph.queue.released_count == 2
-    assert len(graph.queue.events) == 2
+    assert worker.queue.released_count == 2
+    assert len(worker.queue.events) == 2
+    # the cached graph's own capture queue saw none of it
+    (graph,) = srv.cache._graphs.values()
+    assert graph.queue.events == () and graph.queue.released_count == 0
     srv.flush()
-    assert graph.queue.released_count == 4 and graph.queue.events == ()
+    assert worker.queue.released_count == 4 and worker.queue.events == ()
 
 
 def test_worker_rejects_bad_config():
