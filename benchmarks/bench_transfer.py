@@ -1,0 +1,169 @@
+"""Explicit-transfer graphs vs naive per-stage round-trips (ISSUE 4).
+
+Before the host API v2, host<->e-GPU traffic was a per-kernel heuristic
+baked into ``egpu_time`` — invisible to the DAG scheduler, so every stage
+paid its own (partially overlapped) round-trip and nothing could be hoisted
+or overlapped across stages.  With explicit ``enqueue_write_buffer`` /
+``enqueue_read_buffer`` commands, transfers are first-class DAG nodes: a
+fan-out pipeline writes each operand ONCE, runs its branches resident, reads
+the result once — and the critical-path model overlaps the sibling
+branches' transfers with compute.
+
+This bench captures the SAME fan-out/fan-in pipeline both ways:
+
+* **naive**: an in-order chain where every stage round-trips — write its
+  operands, compute, read its result back (the pre-v2 world view);
+* **explicit**: an out-of-order capture with write-once / read-once
+  transfer nodes and resident kernels, fused as a dependency DAG.
+
+The modeled ratio is deterministic (capture-time machine model, not wall
+clock).  Results append to ``BENCH_dispatch.json`` tagged
+``"bench": "transfer"``; CI gates the ratio at >= 1.2x.
+"""
+
+import pathlib
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from .history import append_entry
+
+from repro.core import (EGPU_16T, Buffer, CommandQueue, Context, Device,
+                        Kernel, NDRange)
+from repro.kernels.gemm.ref import counts as gemm_counts
+from repro.kernels.gemm.ref import gemm_ref
+
+SIZE = 128         # per-branch GeMM operand size
+BRANCHES = 4       # independent (write -> GeMM) branches
+OUT_PATH = pathlib.Path(__file__).resolve().parent.parent / "BENCH_dispatch.json"
+
+
+def _kern(name):
+    return Kernel(name=name, executor=gemm_ref,
+                  counts=lambda **kw: gemm_counts(m=SIZE, n=SIZE, k=SIZE))
+
+
+def _combine_kernel():
+    def combine(*xs):
+        out = xs[0]
+        for x in xs[1:]:
+            out = out + x
+        return out
+    return Kernel(name="combine", executor=combine,
+                  counts=lambda **kw: gemm_counts(m=SIZE, n=SIZE, k=1))
+
+
+def _operands():
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.standard_normal((SIZE, SIZE)) * 0.1, jnp.float32)
+    ws = [jnp.asarray(rng.standard_normal((SIZE, SIZE)) * 0.1, jnp.float32)
+          for _ in range(BRANCHES)]
+    return x, ws
+
+
+def _capture_explicit(ctx):
+    """Out-of-order DAG: write each operand once, branches resident,
+    one read at the end — transfers overlap compute across branches."""
+    x, ws = _operands()
+    ndr = NDRange((SIZE, SIZE), (8, 8))
+    q = CommandQueue(ctx, out_of_order=True)
+    with q.capture() as graph:
+        bx = Buffer(jnp.zeros_like(x))
+        q.enqueue_write_buffer(bx, x)
+        branches = []
+        for i, w in enumerate(ws):
+            bw = Buffer(jnp.zeros_like(w))
+            q.enqueue_write_buffer(bw, w)
+            branches.append(q.enqueue_nd_range(
+                _kern(f"branch{i}"), ndr, (bx, bw), _resident=True))
+        out = q.enqueue_nd_range(_combine_kernel(), ndr,
+                                 tuple(b.outputs[0] for b in branches),
+                                 wait_events=branches, _resident=True)
+        q.enqueue_read_buffer(out.outputs[0])
+    return graph
+
+
+def _capture_naive(ctx):
+    """In-order chain where every stage round-trips its operands — the
+    pre-v2 world: no transfer is shared, hoisted, or overlapped."""
+    x, ws = _operands()
+    ndr = NDRange((SIZE, SIZE), (8, 8))
+    q = CommandQueue(ctx)
+    with q.capture() as graph:
+        partials = []
+        for i, w in enumerate(ws):
+            bx = Buffer(jnp.zeros_like(x))
+            bw = Buffer(jnp.zeros_like(w))
+            q.enqueue_write_buffer(bx, x)
+            q.enqueue_write_buffer(bw, w)
+            ev = q.enqueue_nd_range(_kern(f"branch{i}"), ndr, (bx, bw),
+                                    _resident=True)
+            partials.append(q.enqueue_read_buffer(ev.outputs[0]))
+        combined = []
+        for p in partials:                       # round-trip back in
+            bp = Buffer(jnp.zeros((SIZE, SIZE), jnp.float32))
+            q.enqueue_write_buffer(bp, p.outputs[0])
+            combined.append(bp)
+        out = q.enqueue_nd_range(_combine_kernel(), ndr, tuple(combined),
+                                 _resident=True)
+        q.enqueue_read_buffer(out.outputs[0])
+    return graph
+
+
+def _launch_wall(graph, reps=20):
+    graph.launch(queue_events=False)[0].data.block_until_ready()  # compile
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        graph.launch(queue_events=False)[0].data.block_until_ready()
+    return (time.perf_counter() - t0) / reps
+
+
+def run():
+    print("=" * 76)
+    print("Explicit-transfer DAG vs naive per-stage round-trips "
+          f"({BRANCHES} {SIZE}x{SIZE} GeMM branches)")
+    print("=" * 76)
+    ctx = Context(Device(EGPU_16T))
+
+    explicit = _capture_explicit(ctx)
+    naive = _capture_naive(ctx)
+    n_xfer = sum(1 for n in explicit.nodes if n.is_transfer)
+    n_naive_xfer = sum(1 for n in naive.nodes if n.is_transfer)
+    dag, _ = explicit.fused_modeled()
+    chain, _ = naive.fused_modeled()
+    # both graphs compute the identical function
+    a = explicit.launch(queue_events=False)[0].data
+    b = naive.launch(queue_events=False)[0].data
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-5)
+
+    speedup = chain.total_s / dag.total_s
+    wall = _launch_wall(explicit)
+    print(f"  naive round-trip chain     {chain.total_s * 1e6:9.1f} us "
+          f"({n_naive_xfer} transfer nodes, serial)")
+    print(f"  explicit-transfer DAG      {dag.total_s * 1e6:9.1f} us "
+          f"({n_xfer} transfer nodes on the critical-path model)")
+    print(f"  modeled speedup            {speedup:9.2f}x "
+          "(write-once + overlap vs per-stage round-trips)")
+    print(f"  exposed transfer cycles    {chain.transfer:9.0f} -> "
+          f"{dag.transfer:.0f}")
+    print(f"  fused launch wall          {wall * 1e6:9.1f} us")
+
+    result = {
+        "bench": "transfer",
+        "size": SIZE,
+        "branches": BRANCHES,
+        "explicit_transfer_nodes": n_xfer,
+        "naive_transfer_nodes": n_naive_xfer,
+        "modeled_naive_roundtrip_us": chain.total_s * 1e6,
+        "modeled_explicit_dag_us": dag.total_s * 1e6,
+        "explicit_vs_naive_speedup": speedup,
+        "fused_launch_wall_us": wall * 1e6,
+    }
+    history = append_entry(OUT_PATH, result)
+    print(f"  appended to {OUT_PATH.name} (run #{len(history)})")
+    return result
+
+
+if __name__ == "__main__":
+    run()

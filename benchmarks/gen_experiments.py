@@ -3,7 +3,6 @@
     PYTHONPATH=src python -m benchmarks.gen_experiments > EXPERIMENTS.md
 """
 
-import dataclasses
 import glob
 import json
 import os
@@ -23,7 +22,7 @@ def _load(mesh):
 
 def paper_validation():
     from repro.apps.tinybio import TINYBIO_WORKLOAD, run_tinybio
-    from repro.core import (EGPU_4T, EGPU_8T, EGPU_16T, characterize,
+    from repro.core import (EGPU_4T, EGPU_16T, characterize,
                             egpu_active_power_mw, egpu_time)
     from repro.core.scheduler import optimal_ndrange
     from repro.kernels.gemm.ref import counts as gemm_counts

@@ -4,11 +4,11 @@
 """
 
 import argparse
-import sys
 import time
 
 from . import (bench_dispatch, bench_gemm_overhead, bench_multiqueue,
-               bench_roofline, bench_serve, bench_static, bench_tinybio)
+               bench_roofline, bench_serve, bench_static, bench_tinybio,
+               bench_transfer)
 
 BENCHES = {
     "static": bench_static.run,        # paper Fig 2
@@ -16,6 +16,7 @@ BENCHES = {
     "tinybio": bench_tinybio.run,      # paper Fig 4
     "dispatch": bench_dispatch.run,    # §VIII-B measured analogue
     "multiqueue": bench_multiqueue.run,  # ISSUE-3 out-of-order critical path
+    "transfer": bench_transfer.run,    # ISSUE-4 explicit-transfer DAG
     "serve": bench_serve.run,          # ISSUE-2 cached-graph serving path
     "roofline": bench_roofline.run,    # EXPERIMENTS §Roofline table
 }

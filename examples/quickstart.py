@@ -12,9 +12,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import (APU, EGPU_16T, EGPU_4T, NDRange, Stage,
+from repro.core import (APU, EGPU_16T, EGPU_4T, Program, Stage,
                         characterize, egpu_active_power_mw)
-from repro.kernels.gemm import ops as gemm_ops
 
 print("=" * 70)
 print("1) configure an e-GPU (paper Table II/III)")
@@ -34,7 +33,11 @@ rng = np.random.default_rng(0)
 a = jnp.asarray(rng.integers(-64, 64, (256, 256)), jnp.int32)   # int math:
 b = jnp.asarray(rng.integers(-64, 64, (256, 256)), jnp.int32)   # no FPU!
 apu = APU(EGPU_16T)
-stage = Stage(gemm_ops.make_kernel(EGPU_16T),
+# Tiny-OpenCL host API v2: build the program once, create kernel objects
+# from the registry (clCreateProgramWithBuiltInKernels / clCreateKernel)
+program = Program.build(EGPU_16T)
+print(f"  program kernels: {', '.join(program.kernel_names)}")
+stage = Stage(program.create_kernel("gemm"),
               counts_params={"m": 256, "n": 256, "k": 256})
 # default NDRange = the paper's §VIII-B trick (work-items == hw threads,
 # each looping internally) — scheduling collapses to the constant ~25 us

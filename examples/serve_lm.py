@@ -19,7 +19,8 @@ Run:  PYTHONPATH=src python examples/serve_lm.py
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import APU, EGPU_8T, EGPU_16T, Kernel, Stage
+from repro import tinycl
+from repro.core import APU, EGPU_8T, EGPU_16T, Stage
 from repro.kernels.gemm.ref import counts as gemm_counts
 from repro.kernels.gemm.ref import gemm_ref
 from repro.serve import Server
@@ -30,6 +31,33 @@ MAX_BATCH = 4
 N_REQUESTS = 48
 
 
+# -- Tiny-OpenCL host API v2: the app registers its own kernel families -----
+# (weights are NOT baked in — they flow through Stage consts, so one kernel
+# object serves any checkpoint).  Registry kernels are memoized per
+# (family, config, variant): every worker / rebuild reuses the same objects
+# and the serve GraphCache keys on the registry identity.
+
+@tinycl.kernel_family("lm.embed")
+def _build_embed(config, *, s=BUCKETS[-1]):
+    return tinycl.Kernel(
+        "embed", executor=lambda ids, table: table[ids],
+        counts=lambda **kw: gemm_counts(m=s, n=D, k=1))
+
+
+@tinycl.kernel_family("lm.ffn")
+def _build_ffn(config, *, s=BUCKETS[-1]):
+    return tinycl.Kernel(
+        "ffn", executor=lambda x, w: jnp.maximum(gemm_ref(x, w), 0.0),
+        counts=lambda **kw: gemm_counts(m=s, n=HIDDEN, k=D))
+
+
+@tinycl.kernel_family("lm.logits")
+def _build_logits(config, *, s=BUCKETS[-1]):
+    return tinycl.Kernel(
+        "logits", executor=lambda x, w: gemm_ref(x, w),
+        counts=lambda **kw: gemm_counts(m=s, n=VOCAB, k=HIDDEN))
+
+
 def lm_stages(seed: int = 0):
     """Per-request LM scorer: ids (s,) -> logits (s, VOCAB)."""
     rng = np.random.default_rng(seed)
@@ -37,26 +65,13 @@ def lm_stages(seed: int = 0):
     w1 = jnp.asarray(rng.standard_normal((D, HIDDEN)) * 0.1, jnp.float32)
     w2 = jnp.asarray(rng.standard_normal((HIDDEN, VOCAB)) * 0.1, jnp.float32)
 
-    def embed(ids, table):
-        return table[ids]
-
-    def ffn(x, w):
-        return jnp.maximum(gemm_ref(x, w), 0.0)
-
-    def logits(x, w):
-        return gemm_ref(x, w)
-
-    s = BUCKETS[-1]   # counts at the largest bucket (upper-bound model)
+    # counts at the largest bucket (upper-bound model); one program per
+    # preset — the serve workers build their own for EGPU_8T
+    program = tinycl.Program.build(EGPU_16T)
     return [
-        Stage(Kernel("embed", executor=embed,
-                     counts=lambda **kw: gemm_counts(m=s, n=D, k=1)),
-              consts=(emb,)),
-        Stage(Kernel("ffn", executor=ffn,
-                     counts=lambda **kw: gemm_counts(m=s, n=HIDDEN, k=D)),
-              consts=(w1,)),
-        Stage(Kernel("logits", executor=logits,
-                     counts=lambda **kw: gemm_counts(m=s, n=VOCAB, k=HIDDEN)),
-              consts=(w2,)),
+        Stage(program.create_kernel("lm.embed"), consts=(emb,)),
+        Stage(program.create_kernel("lm.ffn"), consts=(w1,)),
+        Stage(program.create_kernel("lm.logits"), consts=(w2,)),
     ]
 
 

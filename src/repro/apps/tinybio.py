@@ -17,22 +17,17 @@ AND is costed by the machine model — the APU report carries both.
 
 from __future__ import annotations
 
-import dataclasses
-from typing import Dict, Tuple
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..core import APU, EGPUConfig, EGPU_16T, Kernel, Stage
+from ..core import (APU, EGPUConfig, EGPU_16T, Kernel, Program, Stage,
+                    kernel_family)
 from ..kernels.delineate import ops as delineate_ops
-from ..kernels.delineate.ref import counts as delineate_counts
-from ..kernels.fir import ops as fir_ops
-from ..kernels.fir.ref import counts as fir_counts
 from ..kernels.stockham_fft import ops as fft_ops
 from ..kernels.stockham_fft.ref import counts as fft_counts
-from ..kernels.svm import ops as svm_ops
-from ..kernels.svm.ref import counts as svm_counts
 
 TINYBIO_WORKLOAD = dict(n=65_536, taps=128, win=512, n_windows=128,
                         n_sv=256, n_features=36)   # 32 bands + 4 stats
@@ -66,6 +61,32 @@ def _feature_kernel(win: int, n_windows: int):
     return features
 
 
+# App-level Tiny-OpenCL registration (host API v2): TinyBio's two composite
+# stages join the same kernel registry the built-in families live in, so
+# they get the registry's memoization — repeated ``tinybio_stages`` calls
+# reuse the exact kernel objects, which keeps executor jit caches warm and
+# serve GraphCache keys stable — and show how applications extend the
+# program without touching repro.kernels.
+
+@kernel_family("tinybio.delineate_keep")
+def _build_delineate_keep(config: EGPUConfig = EGPU_16T) -> Kernel:
+    """Delineation that also passes the filtered signal through:
+    x -> (x, flags)."""
+    del_k = Program.build(config).create_kernel("delineate")
+    return Kernel("delineate_keep",
+                  executor=lambda x: (x, delineate_ops.delineate(x, 0)),
+                  counts=del_k.counts)
+
+
+@kernel_family("tinybio.fft_features")
+def _build_fft_features(config: EGPUConfig = EGPU_16T, *, win: int = 512,
+                        n_windows: int = 128) -> Kernel:
+    """Stage-3 spectral+time features at a fixed windowing."""
+    return Kernel(name="fft_features",
+                  executor=_feature_kernel(win, n_windows),
+                  counts=lambda **kw: fft_counts(n=win).scaled(n_windows))
+
+
 def tinybio_stages(config: EGPUConfig = EGPU_16T, seed: int = 0):
     """(stages, inputs) for :meth:`repro.core.APU.offload`."""
     wl = TINYBIO_WORKLOAD
@@ -79,27 +100,24 @@ def tinybio_stages(config: EGPUConfig = EGPU_16T, seed: int = 0):
     alpha = np.asarray(rng.standard_normal(wl["n_sv"]) / wl["n_sv"],
                        np.float32)
 
-    fir_k = fir_ops.make_kernel(config)
-    del_k = delineate_ops.make_kernel(config)
-    feat_k = Kernel(name="fft_features",
-                    executor=_feature_kernel(win, nw),
-                    counts=lambda **kw: fft_counts(n=win).scaled(nw))
-    svm_k = svm_ops.make_kernel(config)
-
-    def keep_signal_and_flags(x, flags):
-        return x, flags
-
+    # Host API v2: kernels come from the Tiny-OpenCL program registry —
+    # memoized per (family, config, variant), so repeated stage builds (a
+    # serving loop re-wiring the pipeline per offload) reuse the SAME
+    # kernel objects, keep their compiled executors warm, and give the
+    # serve GraphCache a stable registry identity to key on.
+    program = Program.build(config)
     stages = [
-        Stage(fir_k, consts=(jnp.asarray(h),),
+        Stage(program.create_kernel("fir"), consts=(jnp.asarray(h),),
               counts_params={"n": n, "taps": taps, "itemsize": 2}),
         # delineate consumes the filtered signal; passes (signal, flags) on
-        Stage(Kernel("delineate_keep",
-                     executor=lambda x: (x, delineate_ops.delineate(x, 0)),
-                     counts=del_k.counts),
+        Stage(program.create_kernel("tinybio.delineate_keep"),
               counts_params={"n": n}),
-        Stage(feat_k, counts_params={}),
-        Stage(svm_k, consts=(jnp.asarray(sv), jnp.asarray(alpha),
-                             jnp.float32(0.1)),
+        Stage(program.create_kernel("tinybio.fft_features", win=win,
+                                    n_windows=nw),
+              counts_params={}),
+        Stage(program.create_kernel("svm"),
+              consts=(jnp.asarray(sv), jnp.asarray(alpha),
+                      jnp.float32(0.1)),
               params={"gamma": 0.5},
               counts_params={"q": nw, "m": wl["n_sv"],
                              "d": wl["n_features"]}),

@@ -33,7 +33,6 @@ import jax
 import numpy as np
 
 from ..distributed.sharding import ShardingRules, param_shardings
-from ..models.params import is_spec
 
 #: dtypes np.savez can store natively; anything else goes as raw bytes
 #: (ml_dtypes-backed bf16/f8 views are restored from the manifest dtype).
@@ -85,9 +84,9 @@ def load_checkpoint(path: str, like=None):
         arr = data[info["file"]]
         if info["dtype"] not in _NPZ_NATIVE:   # raw-byte leaves (bf16 etc)
             import ml_dtypes
+            dt = getattr(ml_dtypes, info["dtype"], info["dtype"])
             arr = np.frombuffer(arr.tobytes(),
-                                np.dtype(info["dtype"])).reshape(
-                                    info["shape"])
+                                np.dtype(dt)).reshape(info["shape"])
         flat[key] = arr
     if like is None:
         return flat, manifest

@@ -6,8 +6,11 @@ Public API:
   :class:`KernelKnobs` (TPU projection)
 * execution model: :class:`NDRange`, :func:`schedule`, :func:`optimal_ndrange`
 * runtime (Tiny-OpenCL subset): :class:`Context`, :class:`Device`,
-  :class:`CommandQueue`, :class:`Kernel`, :class:`Buffer`, :class:`Event`,
+  :class:`CommandQueue` (kernels + explicit write/read/copy transfer
+  commands), :class:`Kernel`, :class:`Buffer`, :class:`Event`,
   :class:`CommandGraph` (fused capture/replay dispatch)
+* host API v2: :class:`Program` / :class:`KernelRegistry` /
+  :func:`kernel_family` (see also the ``repro.tinycl`` façade)
 * models: :func:`egpu_time`, :func:`host_time` (machine), :func:`characterize`,
   energy helpers (power)
 * APU: :class:`APU`, :class:`PipelineReport`
@@ -17,13 +20,15 @@ from .apu import APU, PipelineReport, Stage, StageReport
 from .device import (EGPU_4T, EGPU_8T, EGPU_16T, HOST, PRESETS, EGPUConfig,
                      KernelKnobs, check_vmem_budget)
 from .machine import (CAL, PhaseBreakdown, WorkCounts, egpu_time,
-                      fuse_breakdowns, host_time, speedup)
+                      fuse_breakdowns, host_time, speedup, transfer_time)
 from .ndrange import NDRange, crop_from_groups, edge_mask, global_ids, pad_to_groups
 from .power import (StaticCharacter, characterize, egpu_active_power_mw,
                     egpu_energy_j, energy_reduction, host_active_power_mw,
                     host_energy_j)
-from .runtime import (Buffer, CommandGraph, CommandQueue, Context, Device,
-                      Event, GraphBuffer, Kernel)
+from .program import (BUILTIN_FAMILIES, REGISTRY, KernelRegistry, Program,
+                      kernel_family)
+from .runtime import (ArgInfo, Buffer, CommandGraph, CommandQueue, Context,
+                      Device, Event, GraphBuffer, Kernel)
 from .scheduler import Schedule, optimal_ndrange, schedule
 
 __all__ = [
@@ -31,11 +36,13 @@ __all__ = [
     "EGPU_4T", "EGPU_8T", "EGPU_16T", "HOST", "PRESETS", "EGPUConfig",
     "KernelKnobs", "check_vmem_budget",
     "CAL", "PhaseBreakdown", "WorkCounts", "egpu_time", "fuse_breakdowns",
-    "host_time", "speedup",
+    "host_time", "speedup", "transfer_time",
     "NDRange", "crop_from_groups", "edge_mask", "global_ids", "pad_to_groups",
     "StaticCharacter", "characterize", "egpu_active_power_mw", "egpu_energy_j",
     "energy_reduction", "host_active_power_mw", "host_energy_j",
-    "Buffer", "CommandGraph", "CommandQueue", "Context", "Device", "Event",
-    "GraphBuffer", "Kernel",
+    "BUILTIN_FAMILIES", "REGISTRY", "KernelRegistry", "Program",
+    "kernel_family",
+    "ArgInfo", "Buffer", "CommandGraph", "CommandQueue", "Context", "Device",
+    "Event", "GraphBuffer", "Kernel",
     "Schedule", "optimal_ndrange", "schedule",
 ]

@@ -117,29 +117,45 @@ class APU:
     """
 
     def __init__(self, config: EGPUConfig = EGPU_16T,
-                 graph_cache: Optional[Any] = None):
+                 graph_cache: Optional[Any] = None,
+                 explicit_transfers: bool = False):
         self.egpu = Device(config)
         self.host = Device(HOST)
         self.egpu_ctx = Context(self.egpu)
         self.host_ctx = Context(self.host)
         self.graph_cache = graph_cache
+        #: host API v2: captures wrap the pipeline in explicit
+        #: enqueue_write_buffer / enqueue_read_buffer transfer nodes and
+        #: mark every kernel resident (the serving workers' default) —
+        #: see :meth:`capture_pipeline`
+        self.explicit_transfers = explicit_transfers
         # This APU's own launch queue: graph offloads bind their events and
         # modeled totals here, so a shared GraphCache entry (same config,
         # several APUs/workers) never mixes launch histories across callers.
         self.queue = CommandQueue(self.egpu_ctx)
 
+    @property
+    def program(self) -> Any:
+        """The Tiny-OpenCL :class:`~repro.core.program.Program` built for
+        this APU's e-GPU config (memoized — cheap to read repeatedly)."""
+        from .program import Program
+        return Program.build(self.egpu.config)
+
     # -- shared stage wiring -----------------------------------------------
     def wire_pipeline(self, q: CommandQueue, stages: Sequence["Stage"],
                       inputs: Sequence[jax.Array],
                       ndranges: Optional[Sequence[NDRange]] = None,
-                      resident_chain: bool = True
+                      resident_chain: bool = True,
+                      resident_first: bool = False
                       ) -> Tuple[Tuple[Buffer, ...], list]:
         """Enqueue the stage chain on ``q`` (works eagerly or under capture).
 
         ``resident_chain=True`` applies the paper's §IV-B residency: after
         the first kernel, intermediate data stays in the unified memory /
-        D$ — only stage 0 pays the host->D$ fill.  Returns (final buffers,
-        per-stage events).
+        D$ — only stage 0 pays the host->D$ fill.  ``resident_first=True``
+        waives stage 0's fill too — for captures whose input traffic is
+        carried by explicit ``enqueue_write_buffer`` nodes instead of the
+        per-kernel heuristic.  Returns (final buffers, per-stage events).
         """
         ctx = q.ctx
         bufs = tuple(x if isinstance(x, Buffer) else ctx.create_buffer(x)
@@ -150,25 +166,49 @@ class APU:
                    else optimal_ndrange(bufs[0].data.size, ctx.device.config))
             extra = tuple(ctx.create_buffer(x) for x in stage.consts)
             take = bufs[:stage.n_inputs] if stage.n_inputs else bufs
+            self._check_stage_arity(stage, len(take) + len(extra))
             ev = q.enqueue_nd_range(stage.kernel, ndr, take + extra,
                                     params=stage.params,
                                     counts_params=stage.counts_params,
-                                    _resident=resident_chain and i > 0)
+                                    _resident=(resident_first if i == 0
+                                               else resident_chain))
             bufs = ev.outputs
             evs.append(ev)
         return bufs, evs
+
+    @staticmethod
+    def _check_stage_arity(stage: "Stage", n_bufs: int) -> None:
+        """Loud wiring errors via the kernel's clGetKernelArgInfo metadata:
+        a stage feeding the wrong number of buffers fails *here*, naming the
+        kernel and its declared args, instead of deep inside jax."""
+        arity = stage.kernel.n_buffer_args
+        if arity is None:
+            return
+        lo, hi = arity
+        if n_bufs < lo or (hi is not None and n_bufs > hi):
+            info = stage.kernel.arg_info or ()
+            names = [a.name for a in info if a.kind == "buffer"]
+            accepted = (f"exactly {lo}" if hi == lo else
+                        f"{lo} or more" if hi is None else f"{lo}..{hi}")
+            raise ValueError(
+                f"stage {stage.kernel.name!r} wires {n_bufs} buffers but "
+                f"the kernel declares {names} ({accepted} accepted); check "
+                "n_inputs / consts")
 
     def _host_costs(self, stages: Sequence["Stage"],
                     ndranges: Optional[Sequence[NDRange]],
                     graph: CommandGraph) -> List[Tuple[PhaseBreakdown, float]]:
         """Analytic host-side cost of each stage (no execution needed).
 
-        Per-stage NDRanges are derived from each captured node's recorded
-        input size — exactly the sizes the eager host path would see — so
-        graph and eager host reports can never diverge."""
+        Per-stage NDRanges are derived from each captured KERNEL node's
+        recorded input size — exactly the sizes the eager host path would
+        see — so graph and eager host reports can never diverge.  Transfer
+        and sync nodes (explicit-transfer captures) are skipped: the host
+        baseline owns the unified memory and pays no bus traffic."""
         hq = CommandQueue(self.host_ctx)
+        kernel_nodes = [n for n in graph.nodes if n.kind == "kernel"]
         costs = []
-        for i, (stage, node) in enumerate(zip(stages, graph.nodes)):
+        for i, (stage, node) in enumerate(zip(stages, kernel_nodes)):
             ndr = (ndranges[i] if ndranges is not None
                    else optimal_ndrange(node.n_items, self.host.config))
             costs.append(hq._model(stage.kernel, ndr, stage.counts_params,
@@ -198,6 +238,7 @@ class APU:
     def capture_pipeline(self, stages: Sequence["Stage"],
                          inputs: Sequence[jax.Array],
                          ndranges: Optional[Sequence[NDRange]] = None,
+                         explicit_transfers: Optional[bool] = None,
                          ) -> CommandGraph:
         """Capture the stage chain on the e-GPU queue into a reusable
         :class:`~repro.core.runtime.CommandGraph` (launch it repeatedly,
@@ -209,14 +250,36 @@ class APU:
         ``graph.launch_prefix(new_inputs)`` while the per-stage constant
         buffers keep their captured values.  ``graph.n_request_inputs``
         records how many leading externals are pipeline inputs.
+
+        ``explicit_transfers`` (default: the APU's ``explicit_transfers``
+        flag) is the host-API-v2 capture shape: every pipeline input flows
+        through an explicit ``enqueue_write_buffer`` node, every final
+        output through an ``enqueue_read_buffer`` node, and all kernels are
+        marked resident — data movement is priced by dedicated transfer
+        nodes on the DAG (visible to the critical-path model) instead of
+        the per-kernel overlap heuristic.
         """
+        if explicit_transfers is None:
+            explicit_transfers = self.explicit_transfers
         q = CommandQueue(self.egpu_ctx)
         with q.capture() as graph:
             bufs = tuple(self.egpu_ctx.create_buffer(x) for x in inputs)
             for b in bufs:
                 graph._slot_of(b)
-            self.wire_pipeline(q, stages, bufs, ndranges,
-                               resident_chain=True)
+            if explicit_transfers:
+                written = []
+                for b in bufs:
+                    dev = Buffer(b.data)        # device-resident destination
+                    q.enqueue_write_buffer(dev, b)
+                    written.append(dev)
+                finals, _ = self.wire_pipeline(q, stages, written, ndranges,
+                                               resident_chain=True,
+                                               resident_first=True)
+                for out in finals:
+                    q.enqueue_read_buffer(out)
+            else:
+                self.wire_pipeline(q, stages, bufs, ndranges,
+                                   resident_chain=True)
         graph.n_request_inputs = len(bufs)
         return graph
 
@@ -238,12 +301,13 @@ class APU:
         report = getattr(graph, "_pipeline_report", None)
         if report is None:
             host = self._host_costs(stages, ndranges, graph)
+            kernel_nodes = [n for n in graph.nodes if n.kind == "kernel"]
             reports = tuple(
                 StageReport(name=stage.kernel.name, egpu=node.modeled,
                             host=h_mod, egpu_energy_j=node.energy_j,
                             host_energy_j=h_en)
                 for stage, node, (h_mod, h_en)
-                in zip(stages, graph.nodes, host))
+                in zip(stages, kernel_nodes, host))
             # Kernels without a counts model (or an unprofiled queue) still
             # get their functional outputs — just no fused cost to report.
             fused, _ = graph.fused_modeled()

@@ -23,7 +23,6 @@ they can parameterize jitted functions as static arguments.
 from __future__ import annotations
 
 import dataclasses
-import math
 from typing import Tuple
 
 KIB = 1024

@@ -158,6 +158,28 @@ def egpu_time(config: EGPUConfig, counts: WorkCounts, ndr: NDRange) -> PhaseBrea
     )
 
 
+def transfer_time(config: EGPUConfig, nbytes: float) -> PhaseBreakdown:
+    """Transfer-only breakdown of an *explicit* buffer command (host API v2).
+
+    ``clEnqueueWriteBuffer`` / ``ReadBuffer`` / ``CopyBuffer`` analogues move
+    ``nbytes`` over the host<->D$ bus at ``host_bus_bytes_per_cycle`` (the
+    32-bit OBI port, paper §VIII-B).  Unlike the per-kernel ``host_bytes``
+    heuristic in :func:`egpu_time`, an explicit transfer gets **no** prefetch
+    overlap discount — it *is* the traffic, and hiding it behind compute is
+    now the scheduler's job: transfer nodes are ordinary DAG nodes, so
+    :func:`fuse_breakdowns`' critical-path mode overlaps them with compute
+    on independent branches instead of baking a fixed overlap fraction into
+    every kernel.  Startup/scheduling are zero: a DMA-style copy never
+    enters the Tiny-OpenCL kernel scheduler.
+    """
+    if nbytes < 0:
+        raise ValueError(f"transfer of negative size: {nbytes}")
+    return PhaseBreakdown(
+        startup=0.0, scheduling=0.0,
+        transfer=float(nbytes) / config.host_bus_bytes_per_cycle,
+        compute=0.0, freq_hz=config.freq_hz)
+
+
 def host_time(counts: WorkCounts, config: EGPUConfig = HOST) -> PhaseBreakdown:
     """Execution-time model for the scalar X-HEEP host baseline.
 

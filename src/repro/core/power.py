@@ -22,7 +22,6 @@ Published anchors (paper abstract + §VIII-A):
 from __future__ import annotations
 
 import dataclasses
-import math
 from typing import Dict
 
 from .device import EGPUConfig, HOST, KIB

@@ -68,18 +68,41 @@ out-of-order queues; TinyCL mirrors both:
   totals to the *caller's* queue — a cached graph shared across serving
   workers never books one worker's launch on another's history.
 
+Host API v2 — Program objects and explicit data movement (ISSUE 4)
+------------------------------------------------------------------
+
+The host-facing surface mirrors real Tiny-OpenCL object semantics (see
+``repro.core.program`` and the ``repro.tinycl`` façade):
+
+* kernels come from a **registry** (``Program.build(config)`` /
+  ``program.create_kernel(name)``) and carry clSetKernelArg-style argument
+  state (:meth:`Kernel.set_args`, :attr:`Kernel.arg_info`,
+  :meth:`CommandQueue.enqueue_kernel`);
+* data movement is **first-class**: ``enqueue_write_buffer`` /
+  ``enqueue_read_buffer`` / ``enqueue_copy_buffer`` return real events
+  costed as transfer-only :class:`PhaseBreakdown`\\ s from the machine
+  model's bus parameters, obey queue ordering / ``wait_events`` /
+  barriers, and capture as transfer :class:`GraphNode`\\ s — the DAG
+  critical path can overlap a branch's traffic with another branch's
+  compute instead of hiding it inside each kernel's overlap heuristic;
+* :class:`Buffer` flags are enforced: kernels cannot read write-only
+  buffers, transfers cannot write read-only ones.
+
 Kernels are executed functionally (outputs are fresh buffers); this is the
 one semantic departure from OpenCL's in-place buffer writes and is what makes
-every kernel jit/grad/vmap-compatible.  Out-of-order execution therefore
-can never change functional results — ordering is a synchronization and
-machine-model contract.
+every kernel jit/grad/vmap-compatible (the explicit transfer commands are
+the only in-place buffer updates, and they replace the whole value).
+Out-of-order execution therefore can never change functional results —
+ordering is a synchronization and machine-model contract.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import inspect
 import time
 import warnings
+import weakref
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 import jax
@@ -87,17 +110,44 @@ import jax.numpy as jnp
 
 from .device import EGPUConfig, EGPU_16T, HOST
 from .machine import (PhaseBreakdown, WorkCounts, egpu_time, fuse_breakdowns,
-                      host_time)
+                      host_time, transfer_time)
 from .ndrange import NDRange
 from .power import egpu_energy_j, host_energy_j
+from .scheduler import optimal_ndrange
+
+
+#: valid CL_MEM-style access flags: read-only, write-only, read-write
+_BUFFER_FLAGS = ("r", "w", "rw")
 
 
 class Buffer:
-    """A unified-memory buffer (CL_MEM-style flags kept for API fidelity)."""
+    """A unified-memory buffer with **enforced** CL_MEM-style access flags.
+
+    ``flags`` mirror CL_MEM_READ_ONLY / WRITE_ONLY / READ_WRITE and are a
+    real contract since the host API v2 redesign: a kernel launch *reads*
+    its argument buffers, so passing a write-only (``"w"``) buffer raises;
+    :meth:`CommandQueue.enqueue_write_buffer` / ``enqueue_copy_buffer``
+    *write* their destination, so a read-only (``"r"``) destination raises.
+    Kernels execute functionally (outputs are fresh buffers), so explicit
+    transfer commands are the only in-place writes in TinyCL.
+    """
 
     def __init__(self, data: jax.Array, flags: str = "rw"):
-        self.data = jnp.asarray(data)
+        if flags not in _BUFFER_FLAGS:
+            raise ValueError(
+                f"invalid buffer flags {flags!r}: expected one of "
+                f"{_BUFFER_FLAGS} (CL_MEM_READ_ONLY / WRITE_ONLY / "
+                "READ_WRITE)")
+        self.data = data if isinstance(data, jax.Array) else jnp.asarray(data)
         self.flags = flags
+
+    @property
+    def readable(self) -> bool:
+        return "r" in self.flags
+
+    @property
+    def writable(self) -> bool:
+        return "w" in self.flags
 
     @property
     def nbytes(self) -> int:
@@ -121,11 +171,17 @@ class GraphBuffer(Buffer):
 
     Carries only a ``jax.ShapeDtypeStruct`` (shape/dtype/size all work); the
     concrete value exists only inside the fused computation at launch time.
+    ``flags`` inherit from the logical source buffer when the node has one
+    (transfer commands) instead of hardcoding ``"rw"``, so access control
+    survives capture.
     """
 
-    def __init__(self, aval: jax.ShapeDtypeStruct, slot: int):
+    def __init__(self, aval: jax.ShapeDtypeStruct, slot: int,
+                 flags: str = "rw"):
+        if flags not in _BUFFER_FLAGS:
+            raise ValueError(f"invalid buffer flags {flags!r}")
         self.data = aval          # duck-types shape/dtype/size for wiring code
-        self.flags = "rw"
+        self.flags = flags
         self.slot = slot
 
     def read(self) -> jax.Array:
@@ -135,8 +191,80 @@ class GraphBuffer(Buffer):
 
 
 @dataclasses.dataclass(frozen=True)
+class ArgInfo:
+    """clGetKernelArgInfo analogue: one executor argument's metadata.
+
+    ``kind`` is ``"buffer"`` for required positional arguments (memory
+    objects in OpenCL terms) and ``"param"`` for defaulted / keyword-only
+    arguments (the kernel-args scalar region).
+    """
+
+    index: int
+    name: str
+    kind: str                       # "buffer" | "param"
+    has_default: bool = False
+
+
+class _ArgState:
+    """Mutable clSetKernelArg storage (excluded from Kernel eq/hash)."""
+
+    __slots__ = ("buffers", "params")
+
+    def __init__(self) -> None:
+        self.buffers: Optional[List[Optional["Buffer"]]] = None
+        self.params: Dict[str, Any] = {}
+
+
+#: memoized executor introspection: executor -> (arg_info, (min, max) buffer
+#: arity).  Weak keys — the cache never outlives an ad-hoc executor; the
+#: registry's memoized kernels keep theirs alive anyway.  Executors that
+#: reject weakrefs fall through to per-call inspection.
+_ARG_INFO_CACHE: "weakref.WeakKeyDictionary[Any, Tuple]" = (
+    weakref.WeakKeyDictionary())
+
+
+def _introspect_executor(executor: Callable[..., Any]) -> Tuple[
+        Optional[Tuple["ArgInfo", ...]], Optional[Tuple[int, Optional[int]]]]:
+    try:
+        cached = _ARG_INFO_CACHE.get(executor)
+    except TypeError:
+        cached = None
+    if cached is not None:
+        return cached
+    try:
+        sig = inspect.signature(executor)
+    except (TypeError, ValueError):
+        result = (None, None)
+    else:
+        info: List[ArgInfo] = []
+        lo = hi = 0
+        variadic = False
+        for i, p in enumerate(sig.parameters.values()):
+            if p.kind is p.VAR_POSITIONAL:
+                info.append(ArgInfo(i, f"*{p.name}", "buffer"))
+                variadic = True
+            elif p.kind is p.VAR_KEYWORD:
+                continue
+            elif p.kind is p.KEYWORD_ONLY or p.default is not p.empty:
+                info.append(ArgInfo(i, p.name, "param",
+                                    has_default=p.default is not p.empty))
+            else:
+                info.append(ArgInfo(i, p.name, "buffer"))
+            if p.kind in (p.POSITIONAL_ONLY, p.POSITIONAL_OR_KEYWORD):
+                hi += 1
+                if p.default is p.empty:
+                    lo += 1
+        result = (tuple(info), (lo, None) if variadic else (lo, hi))
+    try:
+        _ARG_INFO_CACHE[executor] = result
+    except TypeError:
+        pass
+    return result
+
+
+@dataclasses.dataclass(frozen=True)
 class Kernel:
-    """An OpenCL kernel: executor + structural work counts.
+    """An OpenCL kernel object: executor + structural work counts.
 
     ``executor(*arrays, **params) -> array | tuple[array]`` must be pure.
     ``counts(**params) -> WorkCounts`` derives the machine-model inputs from
@@ -144,12 +272,122 @@ class Kernel:
     ``jitted=True`` marks executors that are already ``jax.jit``-wrapped
     (the ``repro.kernels.*.ops`` wrappers): the queue dispatches them
     directly instead of stacking a second jit on top.
+
+    Host API v2 (``repro.core.program``): kernels created through a
+    :class:`~repro.core.program.Program` additionally carry their registry
+    identity — ``family`` (registry name), ``config`` (the
+    :class:`~repro.core.device.EGPUConfig` they were built for) and
+    ``variant`` (canonicalized builder keywords).  The serving layer keys
+    graph caches on this identity instead of hashing executor closures.
+
+    clSetKernelArg-style argument state: :attr:`arg_info` introspects the
+    executor signature, :meth:`set_arg`/:meth:`set_args` stage arguments on
+    the kernel object, and :meth:`CommandQueue.enqueue_kernel` launches with
+    the staged arguments.  The staged state is *per kernel object* (and
+    Program-created kernels are memoized singletons), so concurrent users
+    staging different args on one kernel must pass args explicitly through
+    ``enqueue_nd_range`` instead.
     """
 
     name: str
     executor: Callable[..., Any]
     counts: Optional[Callable[..., WorkCounts]] = None
     jitted: bool = False
+    #: registry identity (set by Program.create_kernel; None for ad-hoc kernels)
+    family: Optional[str] = None
+    config: Optional[Any] = None            # EGPUConfig (hashable, frozen)
+    variant: Tuple[Any, ...] = ()
+    #: mutable clSetKernelArg storage; excluded from eq/hash so kernels stay
+    #: usable as jit-cache keys
+    args_state: _ArgState = dataclasses.field(
+        default_factory=_ArgState, compare=False, repr=False)
+
+    def with_identity(self, family: str, config: Any,
+                      variant: Tuple[Any, ...]) -> "Kernel":
+        """A copy of this kernel stamped with its registry identity."""
+        return dataclasses.replace(self, family=family, config=config,
+                                   variant=variant, args_state=_ArgState())
+
+    # -- clGetKernelArgInfo --------------------------------------------------
+    @property
+    def arg_info(self) -> Optional[Tuple[ArgInfo, ...]]:
+        """Executor argument metadata, or ``None`` when the executor's
+        signature cannot be introspected (C builtins).  A ``*args``
+        executor reports a single trailing variadic buffer entry named
+        ``"*<name>"``.  Memoized per executor — APU stage wiring reads it
+        on every offload."""
+        return _introspect_executor(self.executor)[0]
+
+    @property
+    def n_buffer_args(self) -> Optional[Tuple[int, Optional[int]]]:
+        """(min, max) buffer-argument arity; max is None for ``*args``
+        executors, and the whole thing None when not introspectable.
+        Defaulted positionals may be fed either a buffer or a param, so they
+        widen max without raising min."""
+        return _introspect_executor(self.executor)[1]
+
+    # -- clSetKernelArg ------------------------------------------------------
+    def set_args(self, *buffers: Any, **params: Any) -> "Kernel":
+        """Stage positional buffer args and keyword params (clSetKernelArg
+        for every index at once).  Non-:class:`Buffer` positionals are
+        wrapped.  Returns ``self`` for chaining."""
+        arity = self.n_buffer_args
+        if arity is not None:
+            lo, hi = arity
+            if len(buffers) < lo or (hi is not None and len(buffers) > hi):
+                bound = f"exactly {lo}" if hi == lo else (
+                    f">= {lo}" if hi is None else f"{lo}..{hi}")
+                raise ValueError(
+                    f"kernel {self.name!r} takes {bound} buffer args, "
+                    f"got {len(buffers)}")
+        self.args_state.buffers = [
+            b if isinstance(b, Buffer) else Buffer(b) for b in buffers]
+        self.args_state.params = dict(params)
+        return self
+
+    def set_arg(self, index: int, value: Any) -> "Kernel":
+        """clSetKernelArg: stage one argument by position.
+
+        Buffer-kind indices take a :class:`Buffer` (or array, wrapped);
+        param-kind indices stage the value under the parameter's name.
+        """
+        info = self.arg_info
+        if info is None:
+            raise TypeError(
+                f"kernel {self.name!r} executor is not introspectable; "
+                "use set_args(...) or pass args to enqueue_nd_range")
+        if not 0 <= index < len(info):
+            raise IndexError(
+                f"kernel {self.name!r} has {len(info)} args, index {index} "
+                "out of range")
+        arg = info[index]
+        if arg.kind == "param":
+            self.args_state.params[arg.name] = value
+            return self
+        if arg.name.startswith("*"):
+            raise ValueError(
+                f"kernel {self.name!r} is variadic; stage buffers with "
+                "set_args(...)")
+        n_buf = sum(1 for a in info if a.kind == "buffer")
+        if self.args_state.buffers is None:
+            self.args_state.buffers = [None] * n_buf
+        slot = sum(1 for a in info[:index] if a.kind == "buffer")
+        self.args_state.buffers[slot] = (
+            value if isinstance(value, Buffer) else Buffer(value))
+        return self
+
+    def staged_args(self) -> Tuple[Tuple["Buffer", ...], Dict[str, Any]]:
+        """The staged (buffers, params) — raises if any buffer slot is unset."""
+        st = self.args_state
+        if st.buffers is None:
+            raise RuntimeError(
+                f"kernel {self.name!r} has no staged args; call set_args "
+                "first (or pass args to enqueue_nd_range)")
+        missing = [i for i, b in enumerate(st.buffers) if b is None]
+        if missing:
+            raise RuntimeError(
+                f"kernel {self.name!r} buffer args {missing} are unset")
+        return tuple(st.buffers), dict(st.params)
 
 
 class Event:
@@ -254,6 +492,14 @@ def _static_signature(params: Dict[str, Any]) -> Tuple[str, ...]:
 #: clEnqueueBarrierWithWaitList) — never executed, carries no cost model
 _MARKER = Kernel(name="marker", executor=lambda: ())
 
+#: sentinel kernels identifying explicit data-movement commands; their
+#: modeled cost is a transfer-only PhaseBreakdown attached per event/node
+_WRITE = Kernel(name="write_buffer", executor=lambda x: (x,))
+_READ = Kernel(name="read_buffer", executor=lambda x: (x,))
+_COPY = Kernel(name="copy_buffer", executor=lambda x: (x,))
+_TRANSFER_KINDS = {"write_buffer": "write", "read_buffer": "read",
+                   "copy_buffer": "copy"}
+
 
 class CommandQueue:
     """A command queue bound to one device.
@@ -338,6 +584,17 @@ class CommandQueue:
         modeled = egpu_time(cfg, counts, ndr)
         return modeled, egpu_energy_j(cfg, modeled)
 
+    def _model_transfer(self, nbytes: float
+                        ) -> Tuple[Optional[PhaseBreakdown], Optional[float]]:
+        """Transfer-only cost of an explicit buffer command on this device."""
+        if not self.profile:
+            return None, None
+        cfg = self.ctx.device.config
+        modeled = transfer_time(cfg, nbytes)
+        if self.ctx.device.is_host:
+            return modeled, host_energy_j(modeled)
+        return modeled, egpu_energy_j(cfg, modeled)
+
     def _check_wait_events(self, wait_events: Optional[Sequence[Event]]
                            ) -> Tuple[Event, ...]:
         evs = tuple(wait_events or ())
@@ -395,6 +652,12 @@ class CommandQueue:
         params = params or {}
         cp = counts_params if counts_params is not None else params
         waits = self._check_wait_events(wait_events)
+        for i, b in enumerate(args):
+            if not b.readable:
+                raise ValueError(
+                    f"kernel {kernel.name!r} arg {i} is a write-only "
+                    f"(flags={b.flags!r}) buffer; kernels read their "
+                    "arguments (CL_MEM_WRITE_ONLY violation)")
         if self._capture is not None:
             return self._capture._record(self, kernel, ndr, args, params, cp,
                                          _resident, waits)
@@ -424,6 +687,159 @@ class CommandQueue:
             ev._done = True
             ev.deps = ()
         self._events.append(ev)
+        return ev
+
+    def enqueue_kernel(self, kernel: Kernel, ndr: Optional[NDRange] = None,
+                       counts_params: Optional[Dict[str, Any]] = None,
+                       wait_events: Optional[Sequence[Event]] = None,
+                       _resident: bool = False) -> Event:
+        """clEnqueueNDRangeKernel over the kernel's *staged* arguments.
+
+        The OpenCL-shaped companion to :meth:`enqueue_nd_range`: arguments
+        come from :meth:`Kernel.set_args` / :meth:`Kernel.set_arg` instead
+        of the call site.  ``ndr`` defaults to the paper's §VIII-B optimal
+        NDRange for the first buffer's element count on this queue's device.
+        """
+        bufs, params = kernel.staged_args()
+        if ndr is None:
+            if not bufs:
+                raise ValueError(
+                    "enqueue_kernel needs an explicit NDRange for a kernel "
+                    "with no buffer args")
+            ndr = optimal_ndrange(int(bufs[0].data.size),
+                                  self.ctx.device.config)
+        return self.enqueue_nd_range(kernel, ndr, bufs, params=params,
+                                     counts_params=counts_params,
+                                     wait_events=wait_events,
+                                     _resident=_resident)
+
+    # -- explicit data movement (host API v2) -------------------------------
+    def _transfer_event(self, kernel: Kernel, outputs: Tuple[Buffer, ...],
+                        nbytes: float, waits: Tuple[Event, ...],
+                        producers: Sequence[Buffer], blocking: bool) -> Event:
+        """Eager transfer command: modeled cost + event-DAG bookkeeping."""
+        deps = waits + self._implicit_deps()
+        for b in producers:
+            producer = getattr(b, "_event", None)
+            if (producer is not None and not producer._done
+                    and not producer.released and producer not in deps):
+                deps += (producer,)
+        modeled, energy = self._model_transfer(nbytes)
+        ev = Event(kernel, outputs, modeled, energy, 0.0, deps=deps)
+        if self.blocking or blocking:
+            ev.wait()
+        self._events.append(ev)
+        return ev
+
+    @staticmethod
+    def _check_aval_match(what: str, data: Any, buf: Buffer) -> None:
+        if tuple(data.shape) != tuple(buf.shape) or data.dtype != buf.dtype:
+            raise ValueError(
+                f"{what}: source {tuple(data.shape)}/{data.dtype} does not "
+                f"match destination buffer {tuple(buf.shape)}/{buf.dtype} "
+                "(sub-buffer offsets are not supported)")
+
+    def enqueue_write_buffer(self, buf: Buffer, src: Any,
+                             wait_events: Optional[Sequence[Event]] = None,
+                             blocking: bool = False) -> Event:
+        """clEnqueueWriteBuffer: move host data into ``buf`` (host -> D$).
+
+        A first-class command: it returns a real :class:`Event`, is costed
+        as a transfer-only :class:`PhaseBreakdown` from the device's bus
+        parameters, obeys the queue's ordering rules (implicit chain /
+        ``wait_events`` / barriers) and — under :meth:`capture` — records a
+        transfer :class:`GraphNode`, so the DAG critical path can overlap
+        it with compute on independent branches.  ``buf`` must be writable;
+        later commands consuming ``buf`` observe the written value (the
+        event is ``buf``'s new producer).  ``blocking=True`` is CL_TRUE:
+        wait before returning.
+        """
+        waits = self._check_wait_events(wait_events)
+        if not buf.writable:
+            raise ValueError(
+                f"enqueue_write_buffer into a read-only buffer "
+                f"(flags={buf.flags!r}) — CL_MEM_READ_ONLY violation")
+        if isinstance(src, Buffer) and not src.readable:
+            raise ValueError(
+                f"enqueue_write_buffer from a write-only source "
+                f"(flags={src.flags!r}) — CL_MEM_WRITE_ONLY violation")
+        if self._capture is not None:
+            return self._capture._record_transfer(self, "write", buf, src,
+                                                  waits)
+        if isinstance(buf, GraphBuffer):
+            raise RuntimeError(
+                "cannot write a GraphBuffer eagerly; it has no storage "
+                "outside its graph's launch")
+        data = src.data if isinstance(src, Buffer) else jnp.asarray(src)
+        if not isinstance(data, jax.Array):
+            raise RuntimeError(
+                "enqueue_write_buffer source must hold concrete data "
+                "(GraphBuffer sources are capture-only)")
+        self._check_aval_match("enqueue_write_buffer", data, buf)
+        producers = (src, buf) if isinstance(src, Buffer) else (buf,)
+        buf.data = data
+        ev = self._transfer_event(_WRITE, (buf,), buf.nbytes, waits,
+                                  producers, blocking)
+        buf._event = ev
+        return ev
+
+    def enqueue_read_buffer(self, buf: Buffer,
+                            wait_events: Optional[Sequence[Event]] = None,
+                            blocking: bool = False) -> Event:
+        """clEnqueueReadBuffer: move ``buf`` to the host (D$ -> host).
+
+        Under unified memory the returned event's output *is* the buffer
+        (no copy is made), but the command is costed as a real transfer over
+        the host bus and participates in event ordering and graph capture —
+        a capture ending in read commands returns the read-back values as
+        the graph's outputs.  ``buf`` must be readable.
+        """
+        waits = self._check_wait_events(wait_events)
+        if not buf.readable:
+            raise ValueError(
+                f"enqueue_read_buffer from a write-only buffer "
+                f"(flags={buf.flags!r}) — CL_MEM_WRITE_ONLY violation")
+        if self._capture is not None:
+            return self._capture._record_transfer(self, "read", buf, None,
+                                                  waits)
+        if isinstance(buf, GraphBuffer):
+            raise RuntimeError(
+                "cannot read a GraphBuffer eagerly; launch its graph and "
+                "read the outputs instead")
+        return self._transfer_event(_READ, (buf,), buf.nbytes, waits, (buf,),
+                                    blocking)
+
+    def enqueue_copy_buffer(self, src: Buffer, dst: Buffer,
+                            wait_events: Optional[Sequence[Event]] = None
+                            ) -> Event:
+        """clEnqueueCopyBuffer: device-side copy ``src`` -> ``dst``.
+
+        ``src`` must be readable and ``dst`` writable, with matching
+        shape/dtype.  Costed as one bus transfer of ``src.nbytes``; after
+        the event, ``dst`` holds ``src``'s value (kernels are functional and
+        arrays immutable, so the unified-memory copy is an alias).
+        """
+        waits = self._check_wait_events(wait_events)
+        if not src.readable:
+            raise ValueError(
+                f"enqueue_copy_buffer from a write-only source "
+                f"(flags={src.flags!r})")
+        if not dst.writable:
+            raise ValueError(
+                f"enqueue_copy_buffer into a read-only destination "
+                f"(flags={dst.flags!r}) — CL_MEM_READ_ONLY violation")
+        self._check_aval_match("enqueue_copy_buffer", src.data, dst)
+        if self._capture is not None:
+            return self._capture._record_transfer(self, "copy", dst, src,
+                                                  waits)
+        if isinstance(src, GraphBuffer) or isinstance(dst, GraphBuffer):
+            raise RuntimeError(
+                "cannot copy GraphBuffers eagerly; they have no storage "
+                "outside their graph's launch")
+        dst.data = src.data
+        ev = self._transfer_event(_COPY, (dst,), src.nbytes, waits,
+                                  (src, dst), blocking=False)
+        dst._event = ev
         return ev
 
     # -- synchronization commands ------------------------------------------
@@ -582,6 +998,15 @@ class GraphNode:
     #: wait_events + the enqueueing queue's ordering rules) — the edges of
     #: the event-dependency DAG the critical-path model walks
     deps: Tuple[int, ...] = ()
+    #: node class: "kernel", "sync" (marker/barrier), or an explicit
+    #: transfer command — "write" / "read" / "copy"
+    kind: str = "kernel"
+    #: bytes moved over the host bus (transfer nodes only)
+    nbytes: float = 0.0
+
+    @property
+    def is_transfer(self) -> bool:
+        return self.kind in ("write", "read", "copy")
 
 
 class CommandGraph:
@@ -627,6 +1052,7 @@ class CommandGraph:
         self._buf_slot: Dict[int, int] = {}    # id(Buffer) -> slot
         self._bufs_alive: List[Buffer] = []    # keep ids stable during capture
         self._slot_producer: Dict[int, int] = {}   # slot -> producing node
+        self._slot_readers: Dict[int, List[int]] = {}  # slot -> consumer nodes
         self._queue_nodes: Dict[int, List[int]] = {}   # id(queue) -> nodes
         self._last_node: Dict[int, int] = {}   # id(queue) -> last node idx
         self._barrier_node: Dict[int, int] = {}  # out-of-order barrier point
@@ -729,6 +1155,8 @@ class CommandGraph:
                              out_avals, modeled, energy,
                              n_items=int(args[0].data.size) if args else 0,
                              deps=tuple(sorted(deps))))
+        for s in in_slots:
+            self._slot_readers.setdefault(s, []).append(idx)
         for s in out_slots:
             self._slot_producer[s] = idx
         outs = tuple(GraphBuffer(a, s) for a, s in zip(out_avals, out_slots))
@@ -789,10 +1217,91 @@ class CommandGraph:
         idx = self._append_node(
             queue, GraphNode(_MARKER, lambda: (), (), (), (),
                              None, None, n_items=0,
-                             deps=tuple(sorted(deps))))
+                             deps=tuple(sorted(deps)), kind="sync"))
         if barrier:
             self._barrier_node[qid] = idx
         ev = Event(_MARKER, (), None, None, 0.0)
+        ev._graph = self
+        ev._dep_nodes = frozenset((idx,))
+        return ev
+
+    def _record_transfer(self, queue: CommandQueue, kind: str, buf: Buffer,
+                         src: Any, wait_events: Tuple[Event, ...]) -> Event:
+        """Capture an explicit transfer command as a real :class:`GraphNode`.
+
+        The node's ``call`` is identity (XLA elides it inside the fused
+        computation — under unified memory the data never actually moves),
+        but it carries the transfer-only machine model and full dependency
+        edges, so ``fused_modeled()``'s critical path prices the traffic
+        and can overlap it with compute on independent branches.
+
+        Slot wiring per command:
+
+        * ``write``: the host source becomes an input slot (an *external*
+          when it is fresh data — ``launch_prefix`` can then feed new
+          request payloads straight through write nodes); the destination
+          buffer is **rebound** to the node's output slot, so later
+          consumers of ``buf`` depend on the write.  The old binding (if
+          any) contributes a write-after-read/write ordering edge.
+        * ``read``: consumes the buffer's current slot, produces a fresh
+          slot holding the host copy; the buffer keeps its binding.
+        * ``copy``: consumes the source's slot, rebinds the destination.
+        """
+        if kind == "write":
+            src_buf = src if isinstance(src, Buffer) else Buffer(src)
+            CommandQueue._check_aval_match("enqueue_write_buffer",
+                                           src_buf.data, buf)
+            in_buf, rebind = src_buf, buf
+            sentinel, out_flags = _WRITE, buf.flags
+        elif kind == "read":
+            in_buf, rebind = buf, None
+            sentinel, out_flags = _READ, buf.flags
+        else:
+            CommandQueue._check_aval_match("enqueue_copy_buffer",
+                                           src.data, buf)
+            in_buf, rebind = src, buf
+            sentinel, out_flags = _COPY, buf.flags
+        in_slot = self._slot_of(in_buf)
+        aval = jax.ShapeDtypeStruct(tuple(in_buf.data.shape),
+                                    in_buf.data.dtype)
+        nbytes = float(aval.size * aval.dtype.itemsize)
+        modeled, energy = queue._model_transfer(nbytes)
+
+        deps = set()
+        producer = self._slot_producer.get(in_slot)
+        if producer is not None:
+            deps.add(producer)
+        if rebind is not None:
+            # write-after-write on the destination's old producer, plus
+            # write-after-read on every node that consumed the old value —
+            # an overwrite must not model as concurrent with readers of the
+            # value it replaces
+            prev_slot = self._buf_slot.get(id(rebind))
+            if prev_slot is not None:
+                prev_producer = self._slot_producer.get(prev_slot)
+                if prev_producer is not None:
+                    deps.add(prev_producer)
+                deps.update(self._slot_readers.get(prev_slot, ()))
+        for ev in wait_events:
+            deps.update(self._dep_nodes_of(ev))
+        deps.update(self._queue_order_deps(queue))
+
+        out_slot = self._new_slot()
+        idx = self._append_node(
+            queue, GraphNode(sentinel, lambda x: (x,), (in_slot,),
+                             (out_slot,), (aval,), modeled, energy,
+                             n_items=int(aval.size),
+                             deps=tuple(sorted(deps)), kind=kind,
+                             nbytes=nbytes))
+        self._slot_readers.setdefault(in_slot, []).append(idx)
+        self._slot_producer[out_slot] = idx
+        if rebind is not None:
+            self._buf_slot[id(rebind)] = out_slot
+            self._bufs_alive.append(rebind)
+        out = GraphBuffer(aval, out_slot, flags=out_flags)
+        self._buf_slot[id(out)] = out_slot
+        self._bufs_alive.append(out)
+        ev = Event(sentinel, (out,), modeled, energy, 0.0)
         ev._graph = self
         ev._dep_nodes = frozenset((idx,))
         return ev
@@ -843,6 +1352,25 @@ class CommandGraph:
         return self._fused_memo
 
     # -- launch -------------------------------------------------------------
+    def _output_slots(self) -> Tuple[int, ...]:
+        """The slots a launch returns.
+
+        Trailing ``read_buffer`` nodes define the outputs (a capture ending
+        in explicit reads returns the read-back values, one per read, in
+        enqueue order — markers/barriers in between are ignored); otherwise
+        the last node with outputs, so a trailing marker/barrier never eats
+        them.
+        """
+        reads: List[GraphNode] = []
+        for node in reversed(self.nodes):
+            if node.kind == "read":
+                reads.append(node)
+            elif node.out_slots:
+                break
+        if reads:
+            return tuple(s for n in reversed(reads) for s in n.out_slots)
+        return next(n.out_slots for n in reversed(self.nodes) if n.out_slots)
+
     def _fused(self, donate: Tuple[int, ...]) -> Callable:
         key = donate
         fn = self._jit_cache.get(key)
@@ -851,9 +1379,7 @@ class CommandGraph:
 
         nodes = tuple(self.nodes)
         ext_slots = tuple(self._ext_slots)
-        # Outputs come from the last node that HAS any — a trailing
-        # marker/barrier (zero-cost, output-less) must not eat them.
-        out_slots = next(n.out_slots for n in reversed(nodes) if n.out_slots)
+        out_slots = self._output_slots()
         n_slots = self._n_slots
 
         def run(*ext):
@@ -935,19 +1461,20 @@ class CommandGraph:
         outs = tuple(Buffer(r) for r in raw)
         if queue_events:
             target = queue if queue is not None else self.queue
-            # Outputs belong to the node that produced them — the last
-            # KERNEL node, not a trailing marker/barrier (mirrors _fused).
-            last_kernel = max(i for i, n in enumerate(self.nodes)
-                              if n.out_slots)
+            # Outputs belong to the node that produced them (mirrors
+            # _output_slots): the last out_slot-bearing node, or — when the
+            # capture ends in explicit reads — each trailing read node gets
+            # its own read-back buffer.
+            slot_buf = dict(zip(self._output_slots(), outs))
             for i, node in enumerate(self.nodes):
-                node_outs = outs if i == last_kernel else ()
+                node_outs = tuple(slot_buf[s] for s in node.out_slots
+                                  if s in slot_buf)
                 per_node = dispatch if i == 0 else 0.0
                 ev = Event(node.kernel, node_outs, node.modeled,
                            node.energy_j, per_node)
                 target._events.append(ev)
-                if i == last_kernel:
-                    for b in outs:       # dataflow edge for later eager
-                        b._event = ev    # consumers, same as enqueue
+                for b in node_outs:      # dataflow edge for later eager
+                    b._event = ev        # consumers, same as enqueue
         return outs
 
     def launch_prefix(self, inputs: Sequence[Any],
@@ -1023,5 +1550,40 @@ class Context:
     def __init__(self, device: Device):
         self.device = device
 
-    def create_buffer(self, data, flags: str = "rw") -> Buffer:
-        return Buffer(jnp.asarray(data), flags)
+    def create_buffer(self, data, flags: str = "rw",
+                      copy: Optional[bool] = None,
+                      use_host_ptr: bool = False) -> Buffer:
+        """clCreateBuffer analogue.
+
+        ``copy=None`` (default) picks the cheap path per input: a
+        ``jax.Array`` is adopted as-is (it already lives in the unified
+        memory — copying it again would be pure waste), anything else is
+        converted.  ``copy=True`` forces a fresh device array
+        (CL_MEM_COPY_HOST_PTR); ``copy=False`` requires a ``jax.Array`` and
+        guarantees adoption.  ``use_host_ptr=True`` is the
+        CL_MEM_USE_HOST_PTR analogue: the buffer *aliases* the caller's
+        array (same object — exact under unified memory and immutable
+        arrays); it implies ``copy=False`` and rejects non-JAX data, whose
+        storage TinyCL could not alias.
+        """
+        if use_host_ptr:
+            if copy:
+                raise ValueError("use_host_ptr=True is incompatible with "
+                                 "copy=True (CL_MEM_USE_HOST_PTR aliases "
+                                 "the host array)")
+            copy = False
+        if copy is None:
+            copy = not isinstance(data, jax.Array)
+        if not copy:
+            if not isinstance(data, jax.Array):
+                if use_host_ptr:
+                    raise TypeError(
+                        "use_host_ptr requires a jax.Array host pointer, "
+                        f"got {type(data).__name__}")
+                raise TypeError(
+                    f"copy=False requires a jax.Array, got "
+                    f"{type(data).__name__} (TinyCL cannot adopt foreign "
+                    "storage without a copy)")
+            return Buffer(data, flags)
+        arr = jnp.array(data) if isinstance(data, jax.Array) else jnp.asarray(data)
+        return Buffer(arr, flags)

@@ -9,7 +9,6 @@ is resolved once from the actual backend so the same ops work on both.
 from __future__ import annotations
 
 import functools
-import math
 
 import jax
 import jax.numpy as jnp

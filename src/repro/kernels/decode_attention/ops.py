@@ -5,12 +5,18 @@ from __future__ import annotations
 import functools
 
 import jax
-import jax.numpy as jnp
 
+from ...core.device import EGPU_16T, EGPUConfig
+from ...core.program import kernel_family
+from ...core.runtime import Kernel
 from ..common import use_interpret
 from .decode_attention import decode_attention_pallas
-from .ref import (combine_partials, counts,  # noqa: F401 (re-exported)
+from .ref import (combine_partials, counts,
                   decode_attention_partial_ref, decode_attention_ref)
+
+__all__ = ["decode_attention", "combine_partials", "counts",
+           "decode_attention_partial_ref", "decode_attention_ref",
+           "build_kernel"]
 
 
 @functools.partial(jax.jit, static_argnames=("scale", "impl"))
@@ -34,3 +40,19 @@ def decode_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
         out, _, _ = decode_attention_pallas(q, k, v, scale=scale, bk=bk)
         return out
     return decode_attention_ref(q, k, v, scale=scale)
+
+
+@kernel_family("decode_attention")
+def build_kernel(config: EGPUConfig = EGPU_16T, *, use_pallas: bool = True,
+                 scale: float | None = None) -> Kernel:
+    """TinyCL kernel object: one-token attention q (B,H,Dk) x cache k/v
+    (B,KVH,T,D*) -> (B,H,Dv)."""
+    impl = "auto" if use_pallas else "xla"
+    exe = lambda q, k, v: decode_attention(q, k, v, scale=scale, impl=impl)
+    return Kernel(
+        name="decode_attention",
+        executor=exe,
+        counts=lambda b, h, t, dk, dv, itemsize=2: counts(b, h, t, dk, dv,
+                                                          itemsize),
+        jitted=True,   # `decode_attention` is already jax.jit-wrapped
+    )

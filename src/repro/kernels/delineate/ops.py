@@ -5,13 +5,14 @@ from __future__ import annotations
 import functools
 
 import jax
-import jax.numpy as jnp
 
 from ...core.device import EGPU_16T, EGPUConfig
+from ...core.program import deprecated_make_kernel as _deprecated_make_kernel
+from ...core.program import kernel_family
 from ...core.runtime import Kernel
 from ..common import pad_dim
 from .delineate import delineate_pallas
-from .ref import counts as delineate_counts, delineate_ref, extrema_times
+from .ref import counts as delineate_counts, delineate_ref
 
 
 @functools.partial(jax.jit, static_argnames=("block", "thr"))
@@ -29,7 +30,9 @@ def delineate(x: jax.Array, thr=0, block: int = 512) -> jax.Array:
     return flags[:n]
 
 
-def make_kernel(config: EGPUConfig = EGPU_16T, use_pallas: bool = True) -> Kernel:
+@kernel_family("delineate")
+def build_kernel(config: EGPUConfig = EGPU_16T, *,
+                 use_pallas: bool = True) -> Kernel:
     knobs = config.tpu_knobs()
     block = max(512, knobs.lane_tile)
     exe = (lambda x, thr=0: delineate(x, thr, block)) if use_pallas else delineate_ref
@@ -39,3 +42,8 @@ def make_kernel(config: EGPUConfig = EGPU_16T, use_pallas: bool = True) -> Kerne
         counts=lambda n, itemsize=4: delineate_counts(n, itemsize),
         jitted=use_pallas,   # `delineate` is already jax.jit-wrapped
     )
+
+
+def make_kernel(config: EGPUConfig = EGPU_16T, use_pallas: bool = True) -> Kernel:
+    """Deprecated: use ``Program.build(config).create_kernel("delineate")``."""
+    return _deprecated_make_kernel("delineate", config, use_pallas=use_pallas)

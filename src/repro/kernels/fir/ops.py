@@ -8,6 +8,8 @@ import jax
 import jax.numpy as jnp
 
 from ...core.device import EGPU_16T, EGPUConfig
+from ...core.program import deprecated_make_kernel as _deprecated_make_kernel
+from ...core.program import kernel_family
 from ...core.runtime import Kernel
 from ..common import pad_dim, round_up
 from .fir import fir_pallas
@@ -27,7 +29,9 @@ def fir(x: jax.Array, h: jax.Array, block: int = 512) -> jax.Array:
     return y[:n]
 
 
-def make_kernel(config: EGPUConfig = EGPU_16T, use_pallas: bool = True) -> Kernel:
+@kernel_family("fir")
+def build_kernel(config: EGPUConfig = EGPU_16T, *,
+                 use_pallas: bool = True) -> Kernel:
     knobs = config.tpu_knobs()
     block = max(512, knobs.lane_tile)
     exe = (lambda x, h: fir(x, h, block)) if use_pallas else fir_ref
@@ -37,3 +41,8 @@ def make_kernel(config: EGPUConfig = EGPU_16T, use_pallas: bool = True) -> Kerne
         counts=lambda n, taps, itemsize=4: fir_counts(n, taps, itemsize),
         jitted=use_pallas,   # `fir` is already jax.jit-wrapped
     )
+
+
+def make_kernel(config: EGPUConfig = EGPU_16T, use_pallas: bool = True) -> Kernel:
+    """Deprecated: use ``Program.build(config).create_kernel("fir")``."""
+    return _deprecated_make_kernel("fir", config, use_pallas=use_pallas)

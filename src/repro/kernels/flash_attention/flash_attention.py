@@ -15,7 +15,6 @@ elides stores), halving effective FLOPs at S == T.
 from __future__ import annotations
 
 import functools
-import math
 
 import jax
 import jax.numpy as jnp

@@ -19,7 +19,9 @@ import jax.numpy as jnp
 
 from ..common import pad_dim, use_interpret
 from .flash_attention import flash_attention_pallas
-from .ref import counts, mha_ref, repeat_kv  # noqa: F401  (re-exported)
+from .ref import counts, mha_ref, repeat_kv
+
+__all__ = ["flash_attention", "counts", "mha_ref", "repeat_kv"]
 
 NEG_INF = -1e30
 

@@ -6,9 +6,10 @@ from __future__ import annotations
 import functools
 
 import jax
-import jax.numpy as jnp
 
 from ...core.device import EGPU_16T, EGPUConfig, KernelKnobs
+from ...core.program import deprecated_make_kernel as _deprecated_make_kernel
+from ...core.program import kernel_family
 from ...core.runtime import Kernel
 from ..common import pad_dim, round_up
 from .gemm import gemm_pallas, tiles_from_knobs
@@ -30,8 +31,10 @@ def gemm(a: jax.Array, b: jax.Array, knobs: KernelKnobs | None = None) -> jax.Ar
     return out[:m, :n]
 
 
-def make_kernel(config: EGPUConfig = EGPU_16T, use_pallas: bool = True) -> Kernel:
-    """TinyCL kernel object for queue dispatch (benchmarks + examples)."""
+@kernel_family("gemm")
+def build_kernel(config: EGPUConfig = EGPU_16T, *,
+                 use_pallas: bool = True) -> Kernel:
+    """TinyCL kernel object for queue dispatch (registry builder)."""
     knobs = config.tpu_knobs()
     exe = (lambda a, b: gemm(a, b, knobs)) if use_pallas else gemm_ref
     return Kernel(
@@ -40,3 +43,8 @@ def make_kernel(config: EGPUConfig = EGPU_16T, use_pallas: bool = True) -> Kerne
         counts=lambda m, n, k, itemsize=4: gemm_counts(m, n, k, itemsize),
         jitted=use_pallas,   # `gemm` is already jax.jit-wrapped
     )
+
+
+def make_kernel(config: EGPUConfig = EGPU_16T, use_pallas: bool = True) -> Kernel:
+    """Deprecated: use ``Program.build(config).create_kernel("gemm")``."""
+    return _deprecated_make_kernel("gemm", config, use_pallas=use_pallas)

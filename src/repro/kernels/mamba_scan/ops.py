@@ -14,9 +14,15 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from ...core.device import EGPU_16T, EGPUConfig
+from ...core.program import kernel_family
+from ...core.runtime import Kernel
 from ..common import pad_dim, use_interpret
 from .mamba_scan import mamba_scan_pallas
-from .ref import counts, mamba_scan_ref, mamba_step_ref  # noqa: F401
+from .ref import counts, mamba_scan_ref, mamba_step_ref
+
+__all__ = ["mamba_scan", "counts", "mamba_scan_ref", "mamba_step_ref",
+           "build_kernel"]
 
 
 def _combine(p, q):
@@ -81,3 +87,20 @@ def mamba_scan(x: jax.Array, delta: jax.Array, a: jax.Array, b: jax.Array,
     y = y + (x.astype(jnp.float32) * d[None, None].astype(jnp.float32)
              ).astype(y.dtype)
     return y, h
+
+
+@kernel_family("mamba_scan")
+def build_kernel(config: EGPUConfig = EGPU_16T, *, use_pallas: bool = True,
+                 chunk: int = 64) -> Kernel:
+    """TinyCL kernel object: selective scan x/delta (B,T,Dm), a (Dm,N),
+    b/c (B,T,N), d (Dm,) -> (y, final_state)."""
+    impl = "auto" if use_pallas else "xla"
+    exe = (lambda x, delta, a, b, c, d:
+           mamba_scan(x, delta, a, b, c, d, chunk=chunk, impl=impl))
+    return Kernel(
+        name="mamba_scan",
+        executor=exe,
+        counts=lambda bsz, t, dm, n, itemsize=4: counts(bsz, t, dm, n,
+                                                        itemsize),
+        jitted=True,   # `mamba_scan` is already jax.jit-wrapped
+    )

@@ -13,7 +13,9 @@ import jax
 import jax.numpy as jnp
 
 from ..common import pad_dim, use_interpret
-from .ref import counts, rwkv6_scan_ref, rwkv6_step_ref  # noqa: F401
+from .ref import counts, rwkv6_scan_ref, rwkv6_step_ref
+
+__all__ = ["rwkv6_scan", "counts", "rwkv6_scan_ref", "rwkv6_step_ref"]
 from .rwkv6_scan import rwkv6_scan_pallas
 
 

@@ -6,6 +6,8 @@ import jax
 import jax.numpy as jnp
 
 from ...core.device import EGPU_16T, EGPUConfig
+from ...core.program import deprecated_make_kernel as _deprecated_make_kernel
+from ...core.program import kernel_family
 from ...core.runtime import Kernel
 from .ref import counts as fft_counts, stockham_fft_ref
 from .stockham_fft import fft_pallas
@@ -29,7 +31,9 @@ def power_spectrum(x: jax.Array) -> jax.Array:
     return re * re + im * im
 
 
-def make_kernel(config: EGPUConfig = EGPU_16T, use_pallas: bool = True) -> Kernel:
+@kernel_family("stockham_fft")
+def build_kernel(config: EGPUConfig = EGPU_16T, *,
+                 use_pallas: bool = True) -> Kernel:
     def ref_exec(re, im=None):
         if im is None:
             im = jnp.zeros_like(re)
@@ -40,3 +44,9 @@ def make_kernel(config: EGPUConfig = EGPU_16T, use_pallas: bool = True) -> Kerne
         counts=lambda n, itemsize=4: fft_counts(n, itemsize),
         jitted=use_pallas,   # `fft` is already jax.jit-wrapped
     )
+
+
+def make_kernel(config: EGPUConfig = EGPU_16T, use_pallas: bool = True) -> Kernel:
+    """Deprecated: use ``Program.build(config).create_kernel("stockham_fft")``."""
+    return _deprecated_make_kernel("stockham_fft", config,
+                                   use_pallas=use_pallas)

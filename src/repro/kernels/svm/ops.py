@@ -5,9 +5,10 @@ from __future__ import annotations
 import functools
 
 import jax
-import jax.numpy as jnp
 
 from ...core.device import EGPU_16T, EGPUConfig
+from ...core.program import deprecated_make_kernel as _deprecated_make_kernel
+from ...core.program import kernel_family
 from ...core.runtime import Kernel
 from ..common import pad_dim
 from .ref import counts as svm_counts, svm_decision_ref
@@ -28,7 +29,9 @@ def svm_decision(x: jax.Array, sv: jax.Array, alpha: jax.Array, b,
     return out[:q] + b
 
 
-def make_kernel(config: EGPUConfig = EGPU_16T, use_pallas: bool = True) -> Kernel:
+@kernel_family("svm")
+def build_kernel(config: EGPUConfig = EGPU_16T, *,
+                 use_pallas: bool = True) -> Kernel:
     exe = svm_decision if use_pallas else svm_decision_ref
     return Kernel(
         name="svm",
@@ -36,3 +39,8 @@ def make_kernel(config: EGPUConfig = EGPU_16T, use_pallas: bool = True) -> Kerne
         counts=lambda q, m, d, itemsize=4, rbf=True: svm_counts(q, m, d, itemsize, rbf),
         jitted=use_pallas,   # `svm_decision` is already jax.jit-wrapped
     )
+
+
+def make_kernel(config: EGPUConfig = EGPU_16T, use_pallas: bool = True) -> Kernel:
+    """Deprecated: use ``Program.build(config).create_kernel("svm")``."""
+    return _deprecated_make_kernel("svm", config, use_pallas=use_pallas)

@@ -26,14 +26,14 @@ conftest/pyproject, where smoke tests expect 1 device.
 import argparse
 import json
 import time
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Optional
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from ..configs import ARCHS, SHAPES, cells, input_specs
-from ..distributed.sharding import (SERVE_RULES, TRAIN_RULES, ShardingRules,
+from ..distributed.sharding import (SERVE_RULES, ShardingRules,
                                     activate, param_specs, spec_for,
                                     train_rules_for)
 from ..models.config import ModelConfig

@@ -23,9 +23,8 @@ from __future__ import annotations
 
 import concurrent.futures
 import dataclasses
-import threading
 import time
-from typing import Any, Callable, Optional, Tuple
+from typing import Any, Callable, Optional
 
 import jax
 

@@ -16,24 +16,19 @@ kills the process at step k to let tests exercise the restart path.
 from __future__ import annotations
 
 import argparse
-import dataclasses
-import os
 import sys
 import time
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from ..configs import ARCHS
 from ..data import DataConfig, SyntheticLMData
-from ..distributed.sharding import activate, train_rules_for
 from ..checkpoint import CheckpointManager
 from ..models.params import init_params
 from ..models.transformer import model_spec
 from ..optim import adamw_init, wsd_schedule
 from ..train.step import TrainConfig, make_train_step
-from .mesh import make_host_mesh
 
 
 def build_host_trainer(cfg, tcfg: TrainConfig, seed: int = 0):

@@ -16,7 +16,6 @@ assigned arch (even minicpm's 36 heads: 36*64 = 2304 = 16*144).
 
 from __future__ import annotations
 
-import math
 from typing import Dict, Optional, Tuple
 
 import jax

@@ -14,8 +14,7 @@ tests (small widths/depths/experts, same block structure).
 from __future__ import annotations
 
 import dataclasses
-import math
-from typing import Optional, Tuple
+from typing import Tuple
 
 
 @dataclasses.dataclass(frozen=True)

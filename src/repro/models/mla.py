@@ -16,7 +16,7 @@ KV-cache reduction, and the reason deepseek-v2's decode_32k cell fits.
 
 from __future__ import annotations
 
-from typing import Dict, Optional, Tuple
+from typing import Dict, Optional
 
 import jax
 import jax.numpy as jnp

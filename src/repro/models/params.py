@@ -23,7 +23,7 @@ Logical axis vocabulary (used by the sharding rules):
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Optional, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -17,7 +17,7 @@ import jax
 import jax.numpy as jnp
 
 from ..distributed.sharding import constrain
-from ..kernels.rwkv6_scan.ops import rwkv6_scan, rwkv6_step_ref
+from ..kernels.rwkv6_scan.ops import rwkv6_scan
 from .config import ModelConfig
 from .layers import cdtype
 from .params import ParamSpec, dense_spec

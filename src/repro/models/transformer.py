@@ -17,8 +17,7 @@ Three entry points (all pure, jit/pjit-able):
 
 from __future__ import annotations
 
-import dataclasses
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Tuple
 
 import jax
 import jax.numpy as jnp

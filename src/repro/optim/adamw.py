@@ -17,7 +17,7 @@ comes free from GSPMD).
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Optional, Tuple
+from typing import Any
 
 import jax
 import jax.numpy as jnp

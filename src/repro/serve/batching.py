@@ -294,6 +294,12 @@ def batched_stages(stages: Sequence[Stage], batch: int) -> List[Stage]:
             executor=_batched_executor(st.kernel.executor, len(st.consts)),
             counts=_batched_counts(st.kernel.counts, batch),
             jitted=False,   # the vmap wrapper is a fresh unjitted callable
+            # registry identity survives batching (with the batch size as an
+            # extra variant axis), keeping serve cache keys stable across
+            # rebuilt pipelines of Program-created kernels
+            family=st.kernel.family,
+            config=st.kernel.config,
+            variant=st.kernel.variant + (("__batched__", batch),),
         )
         out.append(Stage(kern, params=dict(st.params),
                          counts_params=dict(st.counts_params),

@@ -117,12 +117,26 @@ def _params_sig(params: Dict[str, Any]) -> Tuple[Any, ...]:
     return tuple(sorted((k, _value_sig(v)) for k, v in params.items()))
 
 
+def kernel_signature(k: Any) -> Tuple[Any, ...]:
+    """Hashable identity of a :class:`~repro.core.runtime.Kernel`.
+
+    Kernels created through the host-API-v2 registry
+    (:meth:`repro.core.program.Program.create_kernel`) carry a *registry
+    identity* — ``(family, config, variant)`` — which is both cheaper and
+    more stable than hashing executor bytecode + closures: registry kernels
+    are memoized singletons, so two pipelines built from the same program
+    can never mint distinguishable-but-equal closures (the PR-2 signature
+    machinery stays as the fallback for ad-hoc kernels).
+    """
+    if getattr(k, "family", None) is not None:
+        return ("reg", k.family, k.config, k.variant, k.name)
+    return (k.name, _callable_sig(k.executor))
+
+
 def stage_signature(stage: Stage) -> Tuple[Any, ...]:
     """Hashable identity of one :class:`~repro.core.apu.Stage`."""
-    k = stage.kernel
     return (
-        k.name,
-        _callable_sig(k.executor),
+        kernel_signature(stage.kernel),
         _params_sig(stage.params),
         _params_sig(stage.counts_params),
         stage.n_inputs,
@@ -205,7 +219,10 @@ class GraphCache:
         pipe = key_prefix if key_prefix is not None else self._stages_sig(stages)
         ndr = (None if ndranges is None else
                tuple((n.global_size, n.local_size) for n in ndranges))
-        return (apu.egpu.config, pipe, input_signature(inputs), ndr)
+        # explicit-transfer captures have a different node structure (write/
+        # read nodes, resident kernels) than classic ones — never share.
+        return (apu.egpu.config, getattr(apu, "explicit_transfers", False),
+                pipe, input_signature(inputs), ndr)
 
     def get_or_capture(self, apu: APU, stages: Sequence[Stage],
                        inputs: Sequence[Any],

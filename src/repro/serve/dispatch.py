@@ -73,10 +73,15 @@ class QueueWorker:
     """
 
     def __init__(self, config: EGPUConfig, name: Optional[str] = None,
-                 max_in_flight: int = 2):
+                 max_in_flight: int = 2, explicit_transfers: bool = True):
         if max_in_flight < 1:
             raise ValueError("max_in_flight must be >= 1")
-        self.apu = APU(config)
+        # Host API v2 (default): the worker's captures move each
+        # micro-batch through explicit enqueue_write_buffer /
+        # enqueue_read_buffer nodes at the batch boundaries, so the queue's
+        # modeled totals price the real request traffic as dedicated
+        # transfer events instead of the per-kernel overlap heuristic.
+        self.apu = APU(config, explicit_transfers=explicit_transfers)
         #: this worker's own command queue — every launch binds its events
         #: and modeled totals here, never to a cached graph's capture queue
         self.queue = self.apu.queue

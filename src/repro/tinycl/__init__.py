@@ -1,0 +1,71 @@
+"""repro.tinycl — the Tiny-OpenCL host API, under its own name (host API v2).
+
+The paper's §IV contribution is Tiny-OpenCL: a lightweight but *real*
+OpenCL host API — programs, kernel objects, buffer objects, command queues,
+events, and explicit host<->e-GPU data-movement commands over the shared
+X-HEEP memory.  This façade collects the whole host surface in one
+namespace so OpenCL-literate code reads naturally; everything re-exports
+from ``repro.core`` (there is exactly one implementation).
+
+OpenCL -> TinyCL mapping::
+
+    clCreateContext                     Context(Device(config))
+    clCreateCommandQueue                CommandQueue(ctx, ...)
+      CL_QUEUE_OUT_OF_ORDER_EXEC_MODE     out_of_order=True
+    clCreateBuffer                      ctx.create_buffer(data, flags,
+      CL_MEM_USE_HOST_PTR                 use_host_ptr=True / copy=False)
+    clCreateProgramWithBuiltInKernels   Program.build(config)
+    clCreateKernel                      program.create_kernel(name, **variant)
+    clCreateKernelsInProgram            program.create_kernels()
+    clGetKernelArgInfo                  kernel.arg_info
+    clSetKernelArg                      kernel.set_arg(i, v) / kernel.set_args
+    clEnqueueNDRangeKernel              queue.enqueue_kernel(kernel, ndr)
+                                        (queue.enqueue_nd_range for
+                                         call-site args)
+    clEnqueueWriteBuffer                queue.enqueue_write_buffer(buf, src)
+    clEnqueueReadBuffer                 queue.enqueue_read_buffer(buf)
+    clEnqueueCopyBuffer                 queue.enqueue_copy_buffer(src, dst)
+    clEnqueueMarkerWithWaitList         queue.enqueue_marker(wait_events)
+    clEnqueueBarrierWithWaitList        queue.enqueue_barrier(wait_events)
+    clFlush / clFinish                  queue.flush() / queue.finish()
+    clRetainEvent / clReleaseEvent      event.retain() / event.release()
+    clWaitForEvents                     event.wait()
+
+Beyond OpenCL (the paper's modeling + the repo's serving substrate):
+``queue.capture()`` records commands into a :class:`CommandGraph` replayed
+as one fused XLA computation, and every event carries the analytic machine
+model's :class:`PhaseBreakdown` / energy for its device configuration.
+
+Applications extend the kernel registry with the :func:`kernel_family`
+decorator (namespaced names recommended)::
+
+    from repro import tinycl
+
+    @tinycl.kernel_family("myapp.rmsnorm")
+    def build_rmsnorm(config, *, eps=1e-6):
+        return tinycl.Kernel("rmsnorm", executor=..., counts=...)
+
+    kern = tinycl.Program.build(tinycl.EGPU_16T).create_kernel(
+        "myapp.rmsnorm")
+"""
+
+from ..core.device import (EGPU_4T, EGPU_8T, EGPU_16T, HOST, PRESETS,
+                           EGPUConfig, KernelKnobs)
+from ..core.machine import PhaseBreakdown, WorkCounts, transfer_time
+from ..core.ndrange import NDRange
+from ..core.program import (BUILTIN_FAMILIES, REGISTRY, KernelRegistry,
+                            Program, kernel_family)
+from ..core.runtime import (ArgInfo, Buffer, CommandGraph, CommandQueue,
+                            Context, Device, Event, GraphBuffer, Kernel)
+from ..core.scheduler import optimal_ndrange
+
+__all__ = [
+    "EGPU_4T", "EGPU_8T", "EGPU_16T", "HOST", "PRESETS", "EGPUConfig",
+    "KernelKnobs",
+    "PhaseBreakdown", "WorkCounts", "transfer_time",
+    "NDRange", "optimal_ndrange",
+    "BUILTIN_FAMILIES", "REGISTRY", "KernelRegistry", "Program",
+    "kernel_family",
+    "ArgInfo", "Buffer", "CommandGraph", "CommandQueue", "Context", "Device",
+    "Event", "GraphBuffer", "Kernel",
+]

@@ -8,8 +8,7 @@ full forward returning per-frame logits — instead of prefill/decode.
 
 from __future__ import annotations
 
-import functools
-from typing import Callable, Dict
+from typing import Callable
 
 import jax
 import jax.numpy as jnp

@@ -14,11 +14,11 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.configs import ARCHS, SHAPES, cells, input_specs, skip_reason
+from repro.configs import ARCHS, SHAPES, cells, input_specs
 from repro.data import DataConfig, SyntheticLMData
 from repro.models import init_params, model_spec, train_loss
 from repro.models.transformer import decode_step, forward, prefill
-from repro.optim import adamw_init, adamw_update, constant_schedule
+from repro.optim import adamw_init, constant_schedule
 from repro.train.step import TrainConfig, make_train_step
 
 ARCH_IDS = sorted(ARCHS)

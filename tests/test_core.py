@@ -10,7 +10,7 @@ pytest.importorskip("hypothesis")      # not baked into every image
 from hypothesis import given, settings
 from hypothesis import strategies as st
 
-from repro.core import (EGPU_4T, EGPU_8T, EGPU_16T, HOST, PRESETS,
+from repro.core import (EGPU_4T, EGPU_8T, EGPU_16T,
                         EGPUConfig, KernelKnobs, NDRange, WorkCounts,
                         check_vmem_budget, crop_from_groups, egpu_time,
                         host_time, pad_to_groups, schedule)

@@ -8,13 +8,13 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.distributed.elastic import replicate, reshard_arrays
 from repro.distributed.sharding import (SERVE_RULES, TRAIN_FSDP_RULES,
                                         TRAIN_RULES, spec_for,
                                         train_rules_for)
-from repro.launch.hlo_cost import HloModuleCost, analyze_hlo
+from repro.launch.hlo_cost import analyze_hlo
 from repro.launch.mesh import make_host_mesh
 
 

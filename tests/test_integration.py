@@ -8,10 +8,9 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.apps.tinybio import (TINYBIO_WORKLOAD, run_tinybio, synth_signal,
-                                tinybio_stages)
+from repro.apps.tinybio import TINYBIO_WORKLOAD, run_tinybio, synth_signal
 from repro.configs import ARCHS
-from repro.core import APU, EGPU_4T, EGPU_16T
+from repro.core import EGPU_4T, EGPU_16T
 from repro.train.step import TrainConfig
 from repro.launch.train import train_loop
 
@@ -71,8 +70,6 @@ def test_train_loss_decreases():
 
 
 def test_microbatched_grads_match_full_batch():
-    import dataclasses
-
     from repro.data import DataConfig, SyntheticLMData
     from repro.models import init_params, model_spec
     from repro.optim import adamw_init, constant_schedule

@@ -4,7 +4,6 @@ Every Pallas kernel targets TPU (pl.pallas_call + BlockSpec) and validates
 here in interpret mode; the XLA fallbacks are swept too via impl flags.
 """
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest

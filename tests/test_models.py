@@ -9,7 +9,7 @@ import pytest
 
 from repro.models.config import ModelConfig
 from repro.models.layers import (apply_rotary, cross_entropy,
-                                 logits_from_hidden, sinusoidal_positions)
+                                 logits_from_hidden)
 from repro.models.params import abstract_params, init_params, param_bytes
 from repro.models.transformer import (cache_axes, cache_struct, decode_step,
                                       forward, model_spec, prefill)

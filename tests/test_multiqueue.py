@@ -10,13 +10,11 @@ their events and modeled totals to the *launching* queue, so same-config
 workers sharing one cache entry keep exact per-queue histories.
 """
 
-import dataclasses
-
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import (APU, EGPU_16T, HOST, CommandQueue, Context, Device,
+from repro.core import (EGPU_16T, HOST, CommandQueue, Context, Device,
                         Event, Kernel, NDRange, PhaseBreakdown, Stage,
                         fuse_breakdowns)
 from repro.kernels.gemm.ref import counts as gemm_counts

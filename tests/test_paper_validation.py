@@ -17,14 +17,13 @@ our analytic model hits every endpoint within ±15 %).
 
 import dataclasses
 
-import numpy as np
 import pytest
 
 from repro.apps.tinybio import TINYBIO_WORKLOAD
 from repro.core import (EGPU_4T, EGPU_8T, EGPU_16T, HOST, characterize,
                         egpu_active_power_mw, egpu_energy_j, egpu_time,
                         host_energy_j, host_time)
-from repro.core.scheduler import optimal_ndrange, schedule
+from repro.core.scheduler import optimal_ndrange
 from repro.kernels.delineate.ref import counts as del_counts
 from repro.kernels.fir.ref import counts as fir_counts
 from repro.kernels.gemm.ref import counts as gemm_counts

@@ -9,7 +9,6 @@ buffer-donation safety.
 
 import dataclasses
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest

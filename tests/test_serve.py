@@ -8,8 +8,6 @@ with bit-identical batched results, event-lifecycle memory bounds, and
 dispatcher backpressure.
 """
 
-import dataclasses
-
 import jax.numpy as jnp
 import numpy as np
 import pytest
@@ -380,16 +378,23 @@ def test_retire_releases_only_own_event_segment():
         srv.submit(jnp.asarray(rng.standard_normal((8, 8)), jnp.float32))
     (worker,) = srv.dispatcher.workers
     assert worker.depth == 2
-    retired = worker._retire_oldest()
-    assert retired.n_events == 2
-    # exactly one launch's segment released; the in-flight one retained
-    assert worker.queue.released_count == 2
-    assert len(worker.queue.events) == 2
-    # the cached graph's own capture queue saw none of it
     (graph,) = srv.cache._graphs.values()
+    # host API v2: the worker's capture brackets the 2 kernel stages with
+    # explicit write (inputs) and read (outputs) transfer nodes
+    n_nodes = len(graph.nodes)
+    assert n_nodes == 4
+    assert [n.kind for n in graph.nodes] == ["write", "kernel", "kernel",
+                                             "read"]
+    retired = worker._retire_oldest()
+    assert retired.n_events == n_nodes
+    # exactly one launch's segment released; the in-flight one retained
+    assert worker.queue.released_count == n_nodes
+    assert len(worker.queue.events) == n_nodes
+    # the cached graph's own capture queue saw none of it
     assert graph.queue.events == () and graph.queue.released_count == 0
     srv.flush()
-    assert worker.queue.released_count == 4 and worker.queue.events == ()
+    assert (worker.queue.released_count == 2 * n_nodes
+            and worker.queue.events == ())
 
 
 def test_worker_rejects_bad_config():

@@ -14,10 +14,9 @@ from hypothesis import strategies as st
 from repro.checkpoint import (CheckpointManager, load_checkpoint,
                               save_checkpoint)
 from repro.data import DataConfig, SyntheticLMData
-from repro.distributed.compression import (compress_int8, decompress_int8,
-                                           init_error_state)
+from repro.distributed.compression import compress_int8, decompress_int8
 from repro.optim import (AdamWConfig, adamw_init, adamw_update,
-                         cosine_schedule, constant_schedule, wsd_schedule)
+                         cosine_schedule, wsd_schedule)
 
 
 # ---------------------------------------------------------------------------
