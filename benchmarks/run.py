@@ -7,8 +7,8 @@ import argparse
 import time
 
 from . import (bench_dispatch, bench_gemm_overhead, bench_multiqueue,
-               bench_roofline, bench_serve, bench_static, bench_tinybio,
-               bench_transfer)
+               bench_roofline, bench_serve, bench_sharded, bench_static,
+               bench_tinybio, bench_transfer)
 
 BENCHES = {
     "static": bench_static.run,        # paper Fig 2
@@ -18,6 +18,7 @@ BENCHES = {
     "multiqueue": bench_multiqueue.run,  # ISSUE-3 out-of-order critical path
     "transfer": bench_transfer.run,    # ISSUE-4 explicit-transfer DAG
     "serve": bench_serve.run,          # ISSUE-2 cached-graph serving path
+    "sharded": bench_sharded.run,      # ISSUE-5 mesh-sharded serving lane
     "roofline": bench_roofline.run,    # EXPERIMENTS §Roofline table
 }
 

@@ -118,7 +118,8 @@ class APU:
 
     def __init__(self, config: EGPUConfig = EGPU_16T,
                  graph_cache: Optional[Any] = None,
-                 explicit_transfers: bool = False):
+                 explicit_transfers: bool = False,
+                 placement: Optional[Any] = None):
         self.egpu = Device(config)
         self.host = Device(HOST)
         self.egpu_ctx = Context(self.egpu)
@@ -129,6 +130,12 @@ class APU:
         #: mark every kernel resident (the serving workers' default) —
         #: see :meth:`capture_pipeline`
         self.explicit_transfers = explicit_transfers
+        #: hashable device-placement identity, or None for plain
+        #: single-device execution.  A ShardedWorker stamps its mesh +
+        #: sharding-rule signature here; GraphCache keys include it, so a
+        #: sharded capture and a single-device capture of the same pipeline
+        #: can never collide in a shared cache.
+        self.placement = placement
         # This APU's own launch queue: graph offloads bind their events and
         # modeled totals here, so a shared GraphCache entry (same config,
         # several APUs/workers) never mixes launch histories across callers.

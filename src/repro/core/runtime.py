@@ -1351,6 +1351,17 @@ class CommandGraph:
             self._fused_memo = (fused, self.total_energy_j())
         return self._fused_memo
 
+    @property
+    def out_avals(self) -> Tuple[jax.ShapeDtypeStruct, ...]:
+        """Shape/dtype of each launch output, in output order (what a
+        serving layer needs to derive per-output shardings before any
+        launch happened)."""
+        slot_aval: Dict[int, jax.ShapeDtypeStruct] = {}
+        for node in self.nodes:
+            for s, a in zip(node.out_slots, node.out_avals):
+                slot_aval[s] = a
+        return tuple(slot_aval[s] for s in self._output_slots())
+
     # -- launch -------------------------------------------------------------
     def _output_slots(self) -> Tuple[int, ...]:
         """The slots a launch returns.
@@ -1371,8 +1382,14 @@ class CommandGraph:
             return tuple(s for n in reversed(reads) for s in n.out_slots)
         return next(n.out_slots for n in reversed(self.nodes) if n.out_slots)
 
-    def _fused(self, donate: Tuple[int, ...]) -> Callable:
-        key = donate
+    def _fused(self, donate: Tuple[int, ...],
+               in_shardings: Optional[Tuple[Any, ...]] = None,
+               out_shardings: Optional[Tuple[Any, ...]] = None) -> Callable:
+        # One compiled executable per (donation, mesh binding): the same
+        # captured graph serves single-device and sharded launches side by
+        # side — shardings are a launch-time property, never part of the
+        # capture (NamedShardings hash by mesh + spec, so the key is cheap).
+        key = (donate, in_shardings, out_shardings)
         fn = self._jit_cache.get(key)
         if fn is not None:
             return fn
@@ -1392,13 +1409,21 @@ class CommandGraph:
                     vals[slot] = o
             return tuple(vals[s] for s in out_slots)
 
-        fn = jax.jit(run, donate_argnums=donate)
+        jit_kwargs: Dict[str, Any] = {}
+        if in_shardings is not None:
+            jit_kwargs["in_shardings"] = in_shardings
+        if out_shardings is not None:
+            jit_kwargs["out_shardings"] = out_shardings
+        fn = jax.jit(run, donate_argnums=donate, **jit_kwargs)
         self._jit_cache[key] = fn
         return fn
 
     def launch(self, *inputs: Any, donate: Sequence[int] = (),
                queue_events: bool = True,
-               queue: Optional[CommandQueue] = None) -> Tuple[Buffer, ...]:
+               queue: Optional[CommandQueue] = None,
+               in_shardings: Optional[Sequence[Any]] = None,
+               out_shardings: Optional[Sequence[Any]] = None
+               ) -> Tuple[Buffer, ...]:
         """Execute the captured chain as one fused dispatch (non-blocking).
 
         ``inputs`` replace the graph's external buffers in capture order
@@ -1408,6 +1433,18 @@ class CommandGraph:
         ``donate_argnums``); never pass an index whose buffer the caller
         still needs.  Backends without donation support (CPU) silently
         ignore it.  Returns the final node's outputs as fresh buffers.
+
+        **Mesh binding** (sharded serving): ``in_shardings`` — one
+        ``jax.sharding.Sharding`` (or ``None`` = unconstrained) per external
+        input, in capture order — and ``out_shardings`` — one per graph
+        output — compile the fused computation under that placement
+        (GSPMD partitions it across the shardings' mesh).  A cached graph
+        stays pure compiled code under any mesh binding: each distinct
+        (donate, shardings) combination gets its own jitted executable in
+        the graph's jit cache, so one entry serves single-device workers
+        and :class:`~repro.serve.sharded.ShardedWorker`\\ s side by side.
+        Kernels are pure and the batch rows independent, so a data-parallel
+        binding can never change functional results.
 
         **Launch-time queue binding**: per-node modeled events are appended
         to ``queue`` — the *caller's* queue — defaulting to the capture
@@ -1449,7 +1486,23 @@ class CommandGraph:
                     f"launch input {i} is {x.shape}/{x.dtype}, but the graph "
                     f"was captured with {aval.shape}/{aval.dtype}; re-capture "
                     "for a different problem size")
-        fn = self._fused(tuple(sorted(int(i) for i in donate)))
+        in_sh = None
+        if in_shardings is not None:
+            in_sh = tuple(in_shardings)
+            if len(in_sh) != len(self._ext_slots):
+                raise ValueError(
+                    f"in_shardings must cover all {len(self._ext_slots)} "
+                    f"external inputs (None for unconstrained), got "
+                    f"{len(in_sh)}")
+        out_sh = None
+        if out_shardings is not None:
+            out_sh = tuple(out_shardings)
+            n_out = len(self._output_slots())
+            if len(out_sh) != n_out:
+                raise ValueError(
+                    f"out_shardings must cover all {n_out} graph outputs "
+                    f"(None for unconstrained), got {len(out_sh)}")
+        fn = self._fused(tuple(sorted(int(i) for i in donate)), in_sh, out_sh)
         t0 = time.perf_counter()
         with warnings.catch_warnings():
             # CPU backends warn that donated buffers were unused; donation
@@ -1487,7 +1540,10 @@ class CommandGraph:
         data without re-threading the pipeline's parameters (this is the
         entry point ``repro.serve.GraphCache`` launches through).  Pass
         ``queue=`` to bind the launch's events and modeled totals to the
-        caller's queue (see :meth:`launch`).
+        caller's queue, and ``in_shardings=``/``out_shardings=`` to bind
+        the launch to a device mesh (see :meth:`launch`; ``in_shardings``
+        covers ALL externals — replaced prefix and captured constants
+        alike — in capture order).
         """
         inputs = list(inputs)
         if len(inputs) > len(self._ext_values):

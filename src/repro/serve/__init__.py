@@ -10,9 +10,15 @@ engine:
 * :class:`MultiQueueDispatcher` / :class:`QueueWorker` — load-balanced
   multi-queue dispatch with in-flight-depth backpressure and per-queue
   machine-model accounting;
+* :class:`ShardedWorker` (ISSUE 5) — a dispatcher lane spanning a
+  :class:`jax.sharding.Mesh` slice: cached graphs are lowered with
+  ``NamedSharding``\\ s derived from the ``repro.distributed`` rule table
+  (batch -> data axes, divisibility fallback to replication), modeled
+  totals scale by the shard count;
 * :class:`Server` / :class:`ServeReport` — the front-end tying them
   together: submit -> batch -> cached fused launch -> per-request results +
-  requests/s, modeled latency percentiles and energy per request.
+  requests/s, modeled latency percentiles, per-mesh-axis utilization and
+  energy per request.
 """
 
 from .batching import (BucketBatcher, MicroBatch, ServeRequest,
@@ -22,10 +28,14 @@ from .cache import (GraphCache, input_signature, stage_signature,
 from .dispatch import (LaunchTicket, MultiQueueDispatcher, QueueStats,
                        QueueWorker)
 from .server import PERCENTILES, Server, ServeReport
+from .sharded import (BATCH_AXIS, ShardedWorker, data_mesh, mesh_signature,
+                      shard_breakdown)
 
 __all__ = [
     "BucketBatcher", "MicroBatch", "ServeRequest", "batched_stages", "pad_to",
     "GraphCache", "input_signature", "stage_signature", "stages_signature",
     "LaunchTicket", "MultiQueueDispatcher", "QueueStats", "QueueWorker",
     "PERCENTILES", "Server", "ServeReport",
+    "BATCH_AXIS", "ShardedWorker", "data_mesh", "mesh_signature",
+    "shard_breakdown",
 ]

@@ -128,7 +128,8 @@ def pad_to(arr: jax.Array, size: int, axis: int = 0,
     if cur == size:
         return arr
     if cur > size:
-        raise ValueError(f"array extent {cur} exceeds bucket size {size}")
+        raise ValueError(f"array extent {cur} along axis {axis} exceeds "
+                         f"pad target {size}")
     pads = [(0, 0)] * arr.ndim
     pads[axis] = (0, size - cur)
     return jnp.pad(arr, pads, constant_values=fill)
@@ -186,10 +187,41 @@ class BucketBatcher:
             key.append((tuple(shape), str(a.dtype)))
         return tuple(key)
 
+    def _check_oversize(self, arrays: Sequence[jax.Array]) -> None:
+        """One loud, uniform oversize error at intake.
+
+        Both historical failure paths — :meth:`bucket_size_for` (a bare
+        "length exceeds largest bucket" with no array context) and
+        :func:`pad_to` (a generic extent/target mismatch) — are preempted
+        here with a single message naming the array index, the pad axis,
+        the offending extent and the largest configured bucket, so a
+        client submitting an oversize request learns exactly which input
+        to split (or which bucket to add) instead of decoding an internal
+        padding error.
+        """
+        largest = self.bucket_sizes[-1]
+        for j, a in enumerate(arrays):
+            if a.ndim <= self.pad_axis:
+                continue                 # exact-shape keyed: never padded
+            extent = a.shape[self.pad_axis]
+            if extent > largest:
+                raise ValueError(
+                    f"oversize request: array {j} has extent {extent} "
+                    f"along pad_axis {self.pad_axis}, which exceeds the "
+                    f"largest configured bucket {largest} (buckets: "
+                    f"{self.bucket_sizes}); configure a larger bucket or "
+                    "split the request")
+
     # -- request intake -----------------------------------------------------
     def submit(self, *arrays: Any, t_submit: float = 0.0) -> ServeRequest:
-        """Wrap ``arrays`` into a request and stage it in its bucket."""
+        """Wrap ``arrays`` into a request and stage it in its bucket.
+
+        Raises a uniform :class:`ValueError` naming the offending array,
+        axis, extent and largest bucket when any array cannot fit a
+        configured bucket (see :meth:`_check_oversize`).
+        """
         arrs = tuple(jnp.asarray(a) for a in arrays)
+        self._check_oversize(arrs)
         req = ServeRequest(rid=next(self._rid), arrays=arrs,
                            t_submit=t_submit,
                            lengths=tuple(

@@ -221,7 +221,14 @@ class GraphCache:
                tuple((n.global_size, n.local_size) for n in ndranges))
         # explicit-transfer captures have a different node structure (write/
         # read nodes, resident kernels) than classic ones — never share.
+        # The APU's placement (a ShardedWorker's mesh + sharding-rule
+        # signature, None for single-device callers) keys too: sharded and
+        # single-device entries of one pipeline must never collide, so a
+        # shared cache keeps their hit/miss accounting — and their
+        # launch-invariant memos (fused breakdown, pipeline report, the
+        # per-binding jit cache each graph grows) — cleanly separated.
         return (apu.egpu.config, getattr(apu, "explicit_transfers", False),
+                getattr(apu, "placement", None),
                 pipe, input_signature(inputs), ndr)
 
     def get_or_capture(self, apu: APU, stages: Sequence[Stage],

@@ -101,6 +101,18 @@ class QueueWorker:
         return len(self._inflight)
 
     # -- launch / retire ----------------------------------------------------
+    def _do_launch(self, graph: CommandGraph, batch: MicroBatch
+                   ) -> Tuple[Tuple[Buffer, ...],
+                              Optional[PhaseBreakdown], float]:
+        """Fire one launch and return (outputs, fused breakdown, energy).
+
+        The subclass hook :class:`~repro.serve.sharded.ShardedWorker`
+        overrides: it binds the launch to its mesh and scales the modeled
+        breakdown by the shard count actually applied."""
+        outs = graph.launch_prefix(batch.inputs, queue=self.queue)
+        fused, energy = graph.fused_modeled()   # memoized: launch-invariant
+        return outs, fused, energy
+
     def launch(self, graph: CommandGraph, batch: MicroBatch
                ) -> Tuple[LaunchTicket, List[LaunchTicket]]:
         """Launch ``batch`` through ``graph``; returns the new ticket plus
@@ -109,8 +121,7 @@ class QueueWorker:
         while len(self._inflight) >= self.max_in_flight:
             self.backpressure_stalls += 1
             retired.append(self._retire_oldest())
-        outs = graph.launch_prefix(batch.inputs, queue=self.queue)
-        fused, energy = graph.fused_modeled()   # memoized: launch-invariant
+        outs, fused, energy = self._do_launch(graph, batch)
         ticket = LaunchTicket(batch=batch, outputs=outs, worker=self,
                               fused=fused, energy_j=energy,
                               t_launch=time.perf_counter(),
@@ -145,6 +156,13 @@ class QueueWorker:
             out.append(self._retire_oldest())
         return out
 
+    def modeled_s_per_request(self) -> Optional[float]:
+        """Modeled seconds per served request, or ``None`` before any
+        modeled launch completed (unprofiled queues, cold workers)."""
+        if self.n_requests <= 0 or self.modeled_s <= 0.0:
+            return None
+        return self.modeled_s / self.n_requests
+
     def stats(self) -> "QueueStats":
         return QueueStats(
             name=self.name, config=self.apu.egpu.config.name,
@@ -166,10 +184,30 @@ class QueueStats:
     energy_j: float
     peak_in_flight: int
     backpressure_stalls: int
+    #: mesh lane width: total devices this worker's launches span (1 for a
+    #: plain single-device QueueWorker)
+    shards: int = 1
+    #: the worker's mesh layout as ((axis, size), ...); () when unsharded
+    mesh_axes: Tuple[Tuple[str, int], ...] = ()
+    #: mean per-launch utilization of each mesh axis — the fraction of the
+    #: axis's devices a launch's sharding actually exploited (a
+    #: divisibility fallback to replication shows up as < 1.0 here)
+    mesh_utilization: Tuple[Tuple[str, float], ...] = ()
 
 
 class MultiQueueDispatcher:
-    """Route micro-batches to the least-loaded worker (ties: stable order)."""
+    """Route micro-batches to the least-loaded worker.
+
+    "Least loaded" is in-flight depth first; depth ties break on **modeled
+    seconds per request** — the machine model's view of each lane's speed —
+    so a faster / wider lane (a 16-thread config, a sharded mesh lane)
+    genuinely attracts more traffic.  Tie-breaking on raw requests served
+    (the pre-ISSUE-5 rule) permanently biased heterogeneous mixes: a fast
+    worker that served one extra warmup batch lost every subsequent tie to
+    a slower sibling at equal depth.  Workers with no model data yet
+    (cold, or unprofiled) fall back to requests served, and are preferred
+    at equal depth so every lane bootstraps its model quickly.
+    """
 
     def __init__(self, workers: Sequence[QueueWorker]):
         if not workers:
@@ -179,10 +217,19 @@ class MultiQueueDispatcher:
             raise ValueError(f"duplicate worker names: {names}")
         self.workers = list(workers)
 
+    @staticmethod
+    def _route_key(w: QueueWorker) -> Tuple[float, int, float, int]:
+        spr = w.modeled_s_per_request()
+        if spr is None:                  # no model data yet: fall back to
+            return (w.depth, 0, float(w.n_requests), w.n_requests)
+        # final n_requests entry keeps equal-speed (homogeneous) lanes
+        # alternating instead of resolving every exact spr tie to the
+        # first worker in declaration order
+        return (w.depth, 1, spr, w.n_requests)
+
     def pick(self) -> QueueWorker:
-        """Least in-flight depth first, then least requests served — a
-        faster / wider queue naturally attracts more traffic."""
-        return min(self.workers, key=lambda w: (w.depth, w.n_requests))
+        """The worker the next micro-batch should go to (see class doc)."""
+        return min(self.workers, key=self._route_key)
 
     def drain_all(self) -> List[LaunchTicket]:
         out: List[LaunchTicket] = []

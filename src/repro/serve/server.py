@@ -21,8 +21,8 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from collections import deque
-from typing import Any, Deque, Dict, Optional, Sequence, Tuple
+from collections import OrderedDict, deque
+from typing import Any, Deque, Dict, Optional, Sequence, Tuple, Union
 
 import jax.numpy as jnp
 import numpy as np
@@ -55,6 +55,13 @@ class ServeReport:
     padded_elements: int               # elements added purely by padding
     queues: Tuple[QueueStats, ...]
     cache: Dict[str, int]
+    #: mean per-launch utilization of each mesh axis across the sharded
+    #: lanes (batch-weighted); empty when no worker owns a mesh
+    mesh_utilization: Dict[str, float] = dataclasses.field(
+        default_factory=dict)
+    #: completed results dropped by the bounded LRU store (not fetched or
+    #: ``keep``-refreshed within the last ``metrics_window`` completions)
+    results_evicted: int = 0
 
     def summary(self) -> str:
         lines = [
@@ -74,12 +81,22 @@ class ServeReport:
             f"{self.cache['evictions']} evictions "
             f"({self.cache['entries']}/{self.cache['capacity']} resident)",
         ]
+        if self.mesh_utilization:
+            lines.append("mesh util       " + "  ".join(
+                f"{axis} {util:.0%}"
+                for axis, util in sorted(self.mesh_utilization.items())))
+        if self.results_evicted:
+            lines.append(f"results         {self.results_evicted} unread "
+                         "results evicted (bounded LRU store)")
         for qs in self.queues:
+            mesh = ("" if not qs.mesh_axes else "  mesh " + "x".join(
+                f"{a}={s}" for a, s in qs.mesh_axes))
             lines.append(
                 f"  queue {qs.name:12s} {qs.batches:4d} batches "
                 f"{qs.requests:5d} reqs  modeled {qs.modeled_s * 1e3:8.2f} ms "
                 f"{qs.energy_j * 1e6:8.1f} uJ  peak in-flight "
-                f"{qs.peak_in_flight} ({qs.backpressure_stalls} stalls)")
+                f"{qs.peak_in_flight} ({qs.backpressure_stalls} stalls)"
+                + mesh)
         return "\n".join(lines)
 
 
@@ -88,15 +105,20 @@ class Server:
 
     ``stages`` carry *per-request* semantics (exactly what
     :meth:`APU.offload` takes); the server lifts them over the batch axis
-    internally.  ``workers`` name the e-GPU presets to dispatch across —
-    heterogeneous mixes are fine, each gets its own cached graphs.
+    internally.  ``workers`` are the lanes to dispatch across: each entry
+    is either an :class:`EGPUConfig` preset (wrapped into a
+    :class:`QueueWorker`) or a pre-built worker instance — in particular a
+    :class:`~repro.serve.sharded.ShardedWorker` spanning a device-mesh
+    slice.  Heterogeneous mixes are fine, each lane gets its own cached
+    graphs.
 
     Pipeline contract: kernels must be pad-stable along axis 0 of each
     request array (see :mod:`repro.serve.batching`).
     """
 
     def __init__(self, stages: Sequence[Stage],
-                 workers: Sequence[EGPUConfig] = (EGPU_16T,),
+                 workers: Sequence[Union[EGPUConfig, QueueWorker]]
+                 = (EGPU_16T,),
                  bucket_sizes: Sequence[int] = (64, 256, 1024),
                  max_batch: int = 4, max_in_flight: int = 2,
                  cache_capacity: int = 32, fill: float | int = 0,
@@ -106,16 +128,25 @@ class Server:
         self.batcher = BucketBatcher(bucket_sizes, max_batch=max_batch,
                                      fill=fill, crop_outputs=crop_outputs)
         self.dispatcher = MultiQueueDispatcher([
-            QueueWorker(cfg, name=f"{i}:{cfg.name}",
-                        max_in_flight=max_in_flight)
-            for i, cfg in enumerate(workers)])
+            w if isinstance(w, QueueWorker) else
+            QueueWorker(w, name=f"{i}:{w.name}", max_in_flight=max_in_flight)
+            for i, w in enumerate(workers)])
         self.cache = GraphCache(cache_capacity)
         # Every micro-batch is padded to max_batch, so ONE batched pipeline
         # covers all traffic; its (const-hashing) signature is computed once
         # here, never on the hot path.
         self._bstages = batched_stages(self.stages, max_batch)
         self._bsig = stages_signature(self._bstages)
-        self._results: Dict[int, Tuple[Any, ...]] = {}
+        # Completed results in LRU order (completion order, refreshed by
+        # keep=True reads).  Bounded to the metrics window: results nobody
+        # fetched (or keep-refreshed) within the last `metrics_window`
+        # completions are EVICTED, so a long-lived server with
+        # fire-and-forget clients keeps O(window) memory instead of
+        # leaking every unread output forever.
+        self._results: "OrderedDict[int, Tuple[Any, ...]]" = OrderedDict()
+        self._results_window = max(1, int(metrics_window))
+        self._results_evicted = 0
+        self._evicted_upto = -1          # highest rid ever evicted unread
         # Bounded metric windows: percentiles/means in report() describe the
         # last `metrics_window` requests, so a long-lived server's metric
         # memory is O(window), matching the O(in-flight) queue contract.
@@ -175,18 +206,28 @@ class Server:
     def result(self, rid: int, keep: bool = False) -> Tuple[Any, ...]:
         """Per-request outputs (cropped back to the request's true extent).
 
-        Pops the stored result by default so a long-lived server's result
-        store stays bounded by its *unread* requests (pass ``keep=True`` to
-        leave it readable again).  Results of requests no client ever reads
-        do accumulate — read or discard what you submit.
+        Pops the stored result by default (pass ``keep=True`` to leave it
+        readable again).  The store is a bounded LRU: results neither
+        fetched nor ``keep``-refreshed within the last ``metrics_window``
+        completions are evicted, so a long-lived server stays O(window)
+        even when clients never fetch — an evicted read raises
+        :class:`KeyError` with an explicit hint.
         """
         if rid not in self._results:
+            evicted = (" (or it was evicted: results not read within the "
+                       f"last {self._results_window} completions — "
+                       "metrics_window — are dropped)"
+                       if rid <= self._evicted_upto else "")
             raise KeyError(
                 f"request {rid} has no result (yet, or it was already "
-                "read) — flush() the server or submit enough traffic to "
-                "fill its bucket")
-        return (self._results[rid] if keep
-                else self._results.pop(rid))
+                f"read{evicted}) — flush() the server or submit enough "
+                "traffic to fill its bucket")
+        if keep:
+            # LRU refresh: an actively-polled kept result must not age out
+            # behind completions that arrived after its last read
+            self._results.move_to_end(rid)
+            return self._results[rid]
+        return self._results.pop(rid)
 
     @property
     def n_completed(self) -> int:
@@ -208,6 +249,10 @@ class Server:
             n = max(1, t.batch.n_requests)
             for req, outs in zip(t.batch.requests, per_request):
                 self._results[req.rid] = outs
+                while len(self._results) > self._results_window:
+                    old_rid, _ = self._results.popitem(last=False)
+                    self._results_evicted += 1
+                    self._evicted_upto = max(self._evicted_upto, old_rid)
                 if t.fused is not None:
                     # each request *experiences* the whole batch's fused
                     # latency; its amortized cost share (the throughput
@@ -234,6 +279,16 @@ class Server:
         n_batches = self.batcher.n_batches
         fill = (self._n_done / (n_batches * self.batcher.max_batch)
                 if n_batches else 0.0)
+        queues = self.dispatcher.stats()
+        # batch-weighted mean utilization per mesh axis across sharded lanes
+        axis_sum: Dict[str, float] = {}
+        axis_n: Dict[str, int] = {}
+        for qs in queues:
+            for axis, util in qs.mesh_utilization:
+                axis_sum[axis] = axis_sum.get(axis, 0.0) + util * qs.batches
+                axis_n[axis] = axis_n.get(axis, 0) + qs.batches
+        mesh_util = {a: axis_sum[a] / axis_n[a]
+                     for a in axis_sum if axis_n[a]}
         return ServeReport(
             n_requests=self._n_done,
             n_batches=n_batches,
@@ -244,6 +299,8 @@ class Server:
             modeled_energy_per_request_j=energy,
             avg_batch_fill=fill,
             padded_elements=self.batcher.padded_elements,
-            queues=self.dispatcher.stats(),
+            queues=queues,
             cache=self.cache.stats(),
+            mesh_utilization=mesh_util,
+            results_evicted=self._results_evicted,
         )

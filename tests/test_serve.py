@@ -347,8 +347,10 @@ def test_server_report_percentiles_ordered():
 # Multi-queue dispatch + backpressure
 # ---------------------------------------------------------------------------
 def test_dispatcher_balances_and_bounds_in_flight():
+    """Homogeneous lanes split traffic evenly (modeled speeds tie, so the
+    requests-served fallback alternates); the in-flight bound holds."""
     stages = _mm_stages()
-    srv = Server(stages, workers=(EGPU_16T, EGPU_8T), bucket_sizes=(8,),
+    srv = Server(stages, workers=(EGPU_16T, EGPU_16T), bucket_sizes=(8,),
                  max_batch=1, max_in_flight=2)
     rng = np.random.default_rng(11)
     for _ in range(10):
@@ -357,12 +359,81 @@ def test_dispatcher_balances_and_bounds_in_flight():
     rep = srv.report()
     per_worker = {q.name: q for q in rep.queues}
     assert len(per_worker) == 2
-    # least-loaded routing splits a 10-batch stream across both lanes
+    # equal-speed routing splits a 10-batch stream across both lanes
     assert all(q.batches == 5 for q in rep.queues)
     # the in-flight window is respected and backpressure engaged
     assert all(q.peak_in_flight <= 2 for q in rep.queues)
     assert all(q.backpressure_stalls > 0 for q in rep.queues)
     assert all(w.depth == 0 for w in srv.dispatcher.workers)   # drained
+
+
+def test_dispatcher_heterogeneous_mix_favors_modeled_faster_lane():
+    """A 16T lane models faster per request than an 8T one, so it wins
+    depth ties and attracts more traffic — while the slow lane still
+    bootstraps and serves."""
+    stages = _mm_stages()
+    srv = Server(stages, workers=(EGPU_8T, EGPU_16T), bucket_sizes=(8,),
+                 max_batch=1, max_in_flight=2)
+    rng = np.random.default_rng(11)
+    for _ in range(10):
+        srv.submit(jnp.asarray(rng.standard_normal((8, 8)), jnp.float32))
+    srv.flush()
+    per = {q.config: q for q in srv.report().queues}
+    assert per["e-gpu-16t"].batches > per["e-gpu-8t"].batches
+    assert per["e-gpu-8t"].batches >= 1
+    assert all(q.peak_in_flight <= 2 for q in srv.report().queues)
+
+
+def test_pick_tiebreak_uses_modeled_speed_not_requests_served():
+    """Regression (ISSUE 5): after a warmup imbalance, the 16T worker has
+    served MORE requests than the 8T one — under the old raw-n_requests
+    tie-break it lost every depth tie from then on, permanently routing
+    new traffic to the slower lane.  The tie must go to the lane with the
+    lower modeled seconds-per-request."""
+    stages = _mm_stages()
+    slow = QueueWorker(EGPU_8T, name="slow")
+    fast = QueueWorker(EGPU_16T, name="fast")
+    srv = Server(stages, workers=(slow, fast), bucket_sizes=(8,),
+                 max_batch=1)
+    dispatcher = srv.dispatcher
+
+    def submit_to(worker):
+        x = jnp.ones((8, 8), jnp.float32)
+        batch = srv.batcher._collate(
+            srv.batcher.bucket_key_for((x,)),
+            [srv.batcher.submit(x)])
+        graph, _ = srv.cache.get_or_capture(
+            worker.apu, srv._bstages, batch.inputs, key_prefix=srv._bsig)
+        worker.launch(graph, batch)
+
+    # warmup: one batch each, plus ONE extra on the fast worker
+    submit_to(slow)
+    submit_to(fast)
+    submit_to(fast)
+    for w in dispatcher.workers:
+        w.drain()
+    assert fast.n_requests > slow.n_requests       # the historical trap
+    assert all(w.depth == 0 for w in dispatcher.workers)
+    spr = {w.name: w.modeled_s_per_request() for w in dispatcher.workers}
+    assert spr["fast"] < spr["slow"]
+    # equal depth, model data on both: the FAST lane must win the tie
+    assert dispatcher.pick() is fast
+
+
+def test_pick_falls_back_to_requests_served_without_model_data():
+    """Cold workers (no modeled launch yet) keep the original
+    least-requests-served tie-break, and are preferred over warm lanes at
+    equal depth so every lane bootstraps its model."""
+    cold_a = QueueWorker(EGPU_16T, name="a")
+    cold_b = QueueWorker(EGPU_8T, name="b")
+    d = MultiQueueDispatcher([cold_a, cold_b])
+    assert d.pick() is cold_a                      # stable order on full tie
+    cold_a.n_requests = 3                          # simulate served history
+    assert d.pick() is cold_b                      # fewer requests wins
+    cold_a.n_requests = 0
+    cold_b.n_requests = 5
+    cold_b.modeled_s = 1e-3                        # b warms up
+    assert d.pick() is cold_a                      # cold lane bootstraps first
 
 
 def test_retire_releases_only_own_event_segment():
@@ -495,6 +566,89 @@ def test_launch_prefix_replaces_leading_externals_only():
         graph.launch_prefix((y,), donate=(1,))
     # fused accounting is memoized and launch-invariant
     assert graph.fused_modeled() is graph.fused_modeled()
+
+
+def test_server_results_store_bounded_by_metrics_window():
+    """Regression (ISSUE 5): completed-but-never-fetched results must not
+    accumulate forever — the store is bounded to `metrics_window` and an
+    evicted read raises the flush-the-server KeyError with an explicit
+    eviction hint."""
+    stages = _mm_stages()
+    srv = Server(stages, workers=(EGPU_16T,), bucket_sizes=(8,),
+                 max_batch=1, metrics_window=4)
+    rng = np.random.default_rng(21)
+    rids = []
+    for _ in range(10):                  # > window, nothing ever fetched
+        rids.append(srv.submit(
+            jnp.asarray(rng.standard_normal((8, 8)), jnp.float32)))
+    srv.flush()
+    assert len(srv._results) == 4        # O(window), not O(traffic)
+    rep = srv.report()
+    assert rep.results_evicted == 6
+    assert "6 unread results evicted" in rep.summary()
+    # the newest `window` results are still readable
+    for rid in rids[-4:]:
+        (out,) = srv.result(rid)
+        assert out.shape == (8, 8)
+    # an evicted rid raises the existing KeyError, now with the hint
+    with pytest.raises(KeyError, match="evicted"):
+        srv.result(rids[0])
+    # an id that was READ (not evicted) keeps the plain message
+    with pytest.raises(KeyError) as exc:
+        srv.result(rids[-1])
+    assert "flush" in str(exc.value)
+
+
+def test_server_results_keep_refreshes_lru():
+    """keep=True is a real LRU touch: an actively-polled result must not
+    age out behind completions that arrived after its last read."""
+    stages = _mm_stages()
+    srv = Server(stages, workers=(EGPU_16T,), bucket_sizes=(8,),
+                 max_batch=1, metrics_window=3)
+    rng = np.random.default_rng(23)
+
+    def one():
+        return srv.submit(
+            jnp.asarray(rng.standard_normal((8, 8)), jnp.float32))
+
+    kept = one()
+    srv.flush()
+    for _ in range(4):                   # > window newer completions, but
+        one()                            # the kept rid is re-read each round
+        srv.flush()
+        (out,) = srv.result(kept, keep=True)
+    assert out.shape == (8, 8)           # still readable: LRU refreshed
+    (final,) = srv.result(kept)          # and still poppable at the end
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(final))
+
+
+def test_oversize_request_unified_error_at_submit():
+    """Regression (ISSUE 5): both historical oversize paths — the bare
+    bucket_size_for ValueError and pad_to's extent/target mismatch — are
+    replaced by ONE submit-time error naming the array index, axis,
+    extent and largest configured bucket."""
+    b = BucketBatcher((4, 8), max_batch=2)
+    # path 1: single-array request, pad-axis extent exceeds every bucket
+    with pytest.raises(ValueError, match=(
+            r"array 0 has extent 9 along pad_axis 0.*largest configured "
+            r"bucket 8")):
+        b.submit(jnp.zeros(9, jnp.float32))
+    # path 2: multi-array request — the offending array is NAMED, instead
+    # of a later pad_to failure with no request context
+    with pytest.raises(ValueError, match=(
+            r"array 1 has extent 12 along pad_axis 0.*largest configured "
+            r"bucket 8")):
+        b.submit(jnp.zeros(3, jnp.float32), jnp.zeros(12, jnp.float32))
+    assert b.n_pending == 0              # nothing half-staged
+    # the same unified error surfaces through Server.submit
+    stages = _mm_stages()
+    srv = Server(stages, workers=(EGPU_16T,), bucket_sizes=(8,), max_batch=1)
+    with pytest.raises(ValueError, match="oversize request: array 0"):
+        srv.submit(jnp.zeros((99, 8), jnp.float32))
+    # pad_to itself stays loud (and now names the axis) for direct callers
+    from repro.serve import pad_to
+    with pytest.raises(ValueError, match="extent 9 along axis 0"):
+        pad_to(jnp.zeros(9, jnp.float32), 8)
 
 
 def test_server_result_pops_by_default():
