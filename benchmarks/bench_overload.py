@@ -1,0 +1,227 @@
+"""Open-loop overload: goodput under deadlines, shedding, and lane faults.
+
+ISSUE 6's acceptance harness.  A Poisson open-loop arrival process drives
+the serving front door at 2x the fleet's modeled saturation rate — the
+regime where a closed-loop benchmark cannot say anything, because a real
+deployment does not politely wait for the previous request to finish.
+Three arms over the SAME arrival trace and request payloads:
+
+* **fifo** — no admission control, no deadline flushing: the historical
+  queue-everything server.  Under 2x load its modeled backlog grows
+  linearly and almost every request completes past its deadline;
+* **shed** — modeled-capacity admission control + deadline-aware partial
+  flushes: infeasible requests are refused at the door, accepted ones
+  overwhelmingly complete in budget, and the backlog stays bounded near
+  the deadline budget;
+* **shed+faults** — same, under a seeded FaultPlan that blacks out one of
+  the three lanes mid-run and sprinkles launch failures: the dispatcher
+  reroutes/retries, the breaker quarantines the dead lane, and every
+  accepted-and-served request must stay bit-identical to the fault-free
+  eager path.
+
+All timing is *modeled* virtual time (an injected clock + each lane's
+``modeled_busy_until`` machine-model timeline), so goodput — in-deadline
+requests per modeled second — is deterministic and CI can gate it on
+shared runners: goodput(shed) and goodput(shed+faults) must be
+>= 1.3x goodput(fifo).  Results append to ``BENCH_serve.json`` tagged
+``bench=overload``.
+"""
+
+import pathlib
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import APU, EGPU_16T, Kernel, Stage
+from repro.kernels.gemm.ref import counts as gemm_counts
+from repro.kernels.gemm.ref import gemm_ref
+from repro.serve import AdmissionError, Blackout, FaultPlan, Server, env_seed
+
+from .history import append_entry
+
+D = 8              # feature width of the GeMM chain
+CHAIN = 4          # dependent stages per request
+BUCKET = 16        # single pad bucket (requests are 3..16 rows)
+MAX_BATCH = 4
+N_LANES = 3
+MAX_PENDING = 12
+N_REQUESTS = 480
+OFFERED_X = 2.0    # offered load vs modeled saturation
+OUT_PATH = pathlib.Path(__file__).resolve().parent.parent / "BENCH_serve.json"
+
+
+class VClock:
+    """Injected virtual clock: the bench owns time."""
+
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        return self.t
+
+
+def _stages():
+    rng = np.random.default_rng(0)
+    w = jnp.asarray(rng.standard_normal((D, D)) * 0.2, jnp.float32)
+
+    def mlp(x, w):
+        return jnp.maximum(gemm_ref(x, w), 0.0)
+
+    kern = Kernel("mlp", executor=mlp,
+                  counts=lambda **kw: gemm_counts(m=D, n=D, k=D))
+    return [Stage(kern, consts=(w,), n_inputs=1) for _ in range(CHAIN)]
+
+
+def _requests(n, seed):
+    rng = np.random.default_rng(seed)
+    return [jnp.asarray(rng.standard_normal(
+        (int(rng.integers(3, BUCKET + 1)), D)), jnp.float32)
+        for _ in range(n)]
+
+
+def _profile_spr(stages):
+    """Modeled seconds-per-request of one lane on this pipeline (a separate
+    throwaway server, so the measured arms start cold and unpolluted)."""
+    srv = Server(stages, workers=(EGPU_16T,), bucket_sizes=(BUCKET,),
+                 max_batch=MAX_BATCH)
+    for x in _requests(MAX_BATCH, seed=99):
+        srv.submit(x)
+    srv.flush()
+    spr = srv.dispatcher.workers[0].modeled_s_per_request()
+    assert spr is not None and spr > 0
+    return spr
+
+
+def _run_arm(stages, xs, arrivals, budget, admission, fault_plan=None):
+    clk = VClock()
+    srv = Server(stages, workers=(EGPU_16T,) * N_LANES,
+                 bucket_sizes=(BUCKET,), max_batch=MAX_BATCH,
+                 max_pending=MAX_PENDING, admission=admission,
+                 deadline_flush=admission, fault_plan=fault_plan,
+                 breaker_threshold=2, breaker_cooldown=4, clock=clk)
+    accepted = []
+    max_backlog = 0.0
+    max_pending_depth = 0
+    for i, (x, t_arr) in enumerate(zip(xs, arrivals)):
+        clk.t = t_arr
+        srv.tick()                       # deadline pump between arrivals
+        backlog = min(max(0.0, w.modeled_busy_until - clk.t)
+                      for w in srv.dispatcher.workers)
+        max_backlog = max(max_backlog, backlog)
+        try:
+            accepted.append((i, srv.submit(x, deadline=budget)))
+        except AdmissionError:
+            pass
+        max_pending_depth = max(max_pending_depth, srv.batcher.n_pending)
+    srv.flush()
+    return srv, accepted, max_backlog, max_pending_depth
+
+
+def run():
+    print("=" * 76)
+    print(f"Open-loop overload: Poisson arrivals at {OFFERED_X:.1f}x modeled "
+          f"saturation, {N_LANES} lanes")
+    print(f"({N_REQUESTS} requests, chain of {CHAIN} {D}x{D} GeMM stages, "
+          f"bucket {BUCKET}, batch {MAX_BATCH}; modeled virtual time)")
+    print("=" * 76)
+    stages = _stages()
+    spr = _profile_spr(stages)
+    batch_s = spr * MAX_BATCH            # one micro-batch's service time
+    budget = 4.0 * batch_s               # per-request deadline budget
+    sat_rate = N_LANES / spr             # fleet saturation, requests/s
+    rng = np.random.default_rng(7)       # arrival process (fixed, all arms)
+    arrivals = np.cumsum(rng.exponential(
+        1.0 / (OFFERED_X * sat_rate), N_REQUESTS))
+    xs = _requests(N_REQUESTS, seed=21)
+    print(f"  modeled {spr * 1e6:8.2f} us/request -> saturation "
+          f"{sat_rate:,.0f} req/s, deadline budget {budget * 1e6:.1f} us")
+
+    fault_plan = FaultPlan(
+        seed=env_seed(42), p_launch_fail=0.05,
+        blackouts=(Blackout("0:e-gpu-16t", start=5, length=7),))
+    arms = {
+        "fifo": _run_arm(stages, xs, arrivals, budget, admission=False),
+        "shed": _run_arm(stages, xs, arrivals, budget, admission=True),
+        "shed_faulted": _run_arm(stages, xs, arrivals, budget,
+                                 admission=True, fault_plan=fault_plan),
+    }
+
+    # bit-identity of every served request in the FAULTED arm (the one
+    # whose batches were rerouted/retried) against the eager path
+    apu = APU(EGPU_16T)
+    refs = {}
+    srv_f, accepted_f, _, _ = arms["shed_faulted"]
+    n_checked = 0
+    bit_identical = True
+    for i, rid in accepted_f:
+        try:
+            (got,) = srv_f.result(rid)
+        except AdmissionError:
+            continue                     # shed after acceptance: loud, fine
+        if i not in refs:
+            outs, _ = apu.offload(stages, (xs[i],), mode="eager")
+            refs[i] = np.asarray(outs[0].data)
+        bit_identical &= bool(np.array_equal(np.asarray(got), refs[i]))
+        n_checked += 1
+    assert bit_identical, "faulted-arm results diverged from eager path"
+    assert n_checked > 0
+
+    goodput = {}
+    rows = {}
+    for name, (srv, accepted, max_backlog, max_depth) in arms.items():
+        rep = srv.report()
+        goodput[name] = rep.goodput_per_s_modeled
+        rows[name] = dict(
+            accepted=len(accepted), shed=rep.n_shed,
+            violations=rep.n_deadline_violations,
+            deadline_flushes=rep.deadline_flushes,
+            retries=rep.n_retries, quarantines=rep.n_quarantines,
+            dispatch_failures=rep.n_dispatch_failures,
+            max_backlog_s=max_backlog, max_pending_depth=max_depth)
+        print(f"  {name:12s} goodput {rep.goodput_per_s_modeled:10,.0f} "
+              f"req/s modeled  {len(accepted):3d} accepted  "
+              f"{rep.n_shed:3d} shed  {rep.n_deadline_violations:3d} late  "
+              f"backlog <= {max_backlog * 1e6:8.1f} us")
+
+    fifo = max(goodput["fifo"], 1e-12)
+    speedup = goodput["shed"] / fifo
+    speedup_faulted = goodput["shed_faulted"] / fifo
+    print(f"\n  shedding goodput {speedup:.2f}x fifo; with a lane killed + "
+          f"5% launch failures {speedup_faulted:.2f}x (>= 1.3x CI gate)")
+    print(f"  faulted arm: {rows['shed_faulted']['retries']} retries, "
+          f"{rows['shed_faulted']['quarantines']} quarantines, "
+          f"{n_checked} served results bit-identical to eager")
+    # bounded queues: shedding caps the modeled backlog near the deadline
+    # budget while FIFO's grows with the run length
+    for name in ("shed", "shed_faulted"):
+        assert rows[name]["max_backlog_s"] <= 2.0 * budget, (
+            name, rows[name]["max_backlog_s"], budget)
+        assert rows[name]["max_pending_depth"] <= MAX_PENDING
+    assert rows["fifo"]["max_backlog_s"] > 3.0 * budget
+
+    result = {
+        "bench": "overload",
+        "offered_x": OFFERED_X,
+        "n_requests": N_REQUESTS,
+        "n_lanes": N_LANES,
+        "chain_len": CHAIN,
+        "bucket": BUCKET,
+        "max_batch": MAX_BATCH,
+        "max_pending": MAX_PENDING,
+        "modeled_us_per_request": spr * 1e6,
+        "deadline_budget_us": budget * 1e6,
+        "fault_seed": fault_plan.seed,
+        "goodput_modeled": goodput,
+        "goodput_vs_fifo_speedup": speedup,
+        "goodput_faulted_vs_fifo_speedup": speedup_faulted,
+        "arms": rows,
+        "bit_identical_under_faults": bit_identical,
+        "n_bit_identity_checked": n_checked,
+    }
+    history = append_entry(OUT_PATH, result)
+    print(f"  appended to {OUT_PATH.name} (run #{len(history)})")
+    return result
+
+
+if __name__ == "__main__":
+    run()

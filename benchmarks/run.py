@@ -1,14 +1,14 @@
 """Benchmark orchestrator: one bench per paper table/figure + roofline.
 
-    PYTHONPATH=src python -m benchmarks.run [--only static|gemm|tinybio|dispatch|multiqueue|serve|roofline]
+    PYTHONPATH=src python -m benchmarks.run [--only static|gemm|tinybio|dispatch|multiqueue|serve|overload|roofline]
 """
 
 import argparse
 import time
 
 from . import (bench_dispatch, bench_gemm_overhead, bench_multiqueue,
-               bench_roofline, bench_serve, bench_sharded, bench_static,
-               bench_tinybio, bench_transfer)
+               bench_overload, bench_roofline, bench_serve, bench_sharded,
+               bench_static, bench_tinybio, bench_transfer)
 
 BENCHES = {
     "static": bench_static.run,        # paper Fig 2
@@ -19,6 +19,7 @@ BENCHES = {
     "transfer": bench_transfer.run,    # ISSUE-4 explicit-transfer DAG
     "serve": bench_serve.run,          # ISSUE-2 cached-graph serving path
     "sharded": bench_sharded.run,      # ISSUE-5 mesh-sharded serving lane
+    "overload": bench_overload.run,    # ISSUE-6 open-loop goodput under faults
     "roofline": bench_roofline.run,    # EXPERIMENTS §Roofline table
 }
 

@@ -18,24 +18,38 @@ engine:
 * :class:`Server` / :class:`ServeReport` — the front-end tying them
   together: submit -> batch -> cached fused launch -> per-request results +
   requests/s, modeled latency percentiles, per-mesh-axis utilization and
-  energy per request.
+  energy per request;
+* the open-loop front door (ISSUE 6) — SLO-aware intake
+  (``Server.submit(deadline=..., priority=...)`` with modeled-capacity
+  admission control and loud :class:`AdmissionError` sheds), deadline-aware
+  partial-bucket flushing, and fault-tolerant dispatch: a deterministic
+  seeded :class:`FaultPlan` (launch failures, latency spikes, lane
+  :class:`Blackout`\\ s) injected at the worker launch gate, retried by the
+  dispatcher onto other lanes with capped backoff, repeat offenders
+  quarantined behind :class:`CircuitBreaker`\\ s with half-open probes —
+  retried batches stay bit-identical to the fault-free path.
 """
 
 from .batching import (BucketBatcher, MicroBatch, ServeRequest,
                        batched_stages, pad_to)
 from .cache import (GraphCache, input_signature, stage_signature,
                     stages_signature)
-from .dispatch import (LaunchTicket, MultiQueueDispatcher, QueueStats,
-                       QueueWorker)
-from .server import PERCENTILES, Server, ServeReport
+from .dispatch import (CircuitBreaker, DispatchError, LaunchTicket,
+                       MultiQueueDispatcher, QueueStats, QueueWorker)
+from .faults import (Blackout, FaultDecision, FaultPlan, InjectedFault,
+                     apply_spike, env_seed)
+from .server import PERCENTILES, AdmissionError, Server, ServeReport
 from .sharded import (BATCH_AXIS, ShardedWorker, data_mesh, mesh_signature,
                       shard_breakdown)
 
 __all__ = [
     "BucketBatcher", "MicroBatch", "ServeRequest", "batched_stages", "pad_to",
     "GraphCache", "input_signature", "stage_signature", "stages_signature",
-    "LaunchTicket", "MultiQueueDispatcher", "QueueStats", "QueueWorker",
-    "PERCENTILES", "Server", "ServeReport",
+    "CircuitBreaker", "DispatchError", "LaunchTicket", "MultiQueueDispatcher",
+    "QueueStats", "QueueWorker",
+    "Blackout", "FaultDecision", "FaultPlan", "InjectedFault", "apply_spike",
+    "env_seed",
+    "PERCENTILES", "AdmissionError", "Server", "ServeReport",
     "BATCH_AXIS", "ShardedWorker", "data_mesh", "mesh_signature",
     "shard_breakdown",
 ]

@@ -50,6 +50,14 @@ class ServeRequest:
     t_submit: float
     #: true (un-padded) extent of each array along the batcher's pad axis
     lengths: Tuple[int, ...] = ()
+    #: ABSOLUTE completion deadline on the submitter's clock timeline
+    #: (``t_submit + budget``), or ``None`` for best-effort requests;
+    #: drives deadline-aware flushing and violation accounting (ISSUE 6)
+    deadline_s: Optional[float] = None
+    #: scheduling priority (higher wins): under overload a higher-priority
+    #: request may preempt a lower-priority *pending* one instead of being
+    #: shed itself
+    priority: int = 0
 
 
 @dataclasses.dataclass
@@ -148,13 +156,26 @@ class BucketBatcher:
     def __init__(self, bucket_sizes: Sequence[int], max_batch: int = 8,
                  pad_axis: int = 0, fill: float | int = 0,
                  crop_outputs: bool = True):
-        if not bucket_sizes:
+        # Loud construction-time validation (ISSUE 6): the historical
+        # sorted(set(...)) canonicalization silently papered over unsorted
+        # and duplicate bucket lists — a typo like (256, 64, 1024) then
+        # surfaced only as a wrong bucket choice deep in traffic.  Reject
+        # malformed inputs here, where the caller can see them.
+        sizes = [int(b) for b in bucket_sizes]
+        if not sizes:
             raise ValueError("need at least one bucket size")
-        if any(b <= 0 for b in bucket_sizes):
-            raise ValueError("bucket sizes must be positive")
+        bad = [b for b in sizes if b <= 0]
+        if bad:
+            raise ValueError(
+                f"bucket sizes must be positive, got {bad} in {sizes}")
+        if len(set(sizes)) != len(sizes):
+            raise ValueError(f"duplicate bucket sizes: {sizes}")
+        if sizes != sorted(sizes):
+            raise ValueError(
+                f"bucket_sizes must be strictly ascending, got {sizes}")
         if max_batch < 1:
-            raise ValueError("max_batch must be >= 1")
-        self.bucket_sizes = tuple(sorted(set(int(b) for b in bucket_sizes)))
+            raise ValueError(f"max_batch must be >= 1, got {max_batch}")
+        self.bucket_sizes = tuple(sizes)
         self.max_batch = max_batch
         self.pad_axis = pad_axis
         self.fill = fill
@@ -165,6 +186,7 @@ class BucketBatcher:
         self.n_submitted = 0
         self.n_batches = 0
         self.padded_elements = 0   # request elements added purely by padding
+        self.deadline_flushes = 0  # partial buckets launched by tick()
 
     # -- bucketing ----------------------------------------------------------
     def bucket_size_for(self, length: int) -> int:
@@ -213,12 +235,17 @@ class BucketBatcher:
                     "split the request")
 
     # -- request intake -----------------------------------------------------
-    def submit(self, *arrays: Any, t_submit: float = 0.0) -> ServeRequest:
+    def submit(self, *arrays: Any, t_submit: float = 0.0,
+               deadline_s: Optional[float] = None,
+               priority: int = 0) -> ServeRequest:
         """Wrap ``arrays`` into a request and stage it in its bucket.
 
-        Raises a uniform :class:`ValueError` naming the offending array,
-        axis, extent and largest bucket when any array cannot fit a
-        configured bucket (see :meth:`_check_oversize`).
+        ``deadline_s`` is the request's ABSOLUTE deadline on the caller's
+        clock timeline (the server passes ``t_submit + budget``);
+        ``priority`` is its scheduling priority (higher wins under
+        overload).  Raises a uniform :class:`ValueError` naming the
+        offending array, axis, extent and largest bucket when any array
+        cannot fit a configured bucket (see :meth:`_check_oversize`).
         """
         arrs = tuple(jnp.asarray(a) for a in arrays)
         self._check_oversize(arrs)
@@ -227,7 +254,8 @@ class BucketBatcher:
                            lengths=tuple(
                                a.shape[self.pad_axis]
                                if a.ndim > self.pad_axis else 1
-                               for a in arrs))
+                               for a in arrs),
+                           deadline_s=deadline_s, priority=int(priority))
         self.n_submitted += 1
         key = self.bucket_key_for(arrs)
         self._pending.setdefault(key, []).append(req)
@@ -254,6 +282,51 @@ class BucketBatcher:
                 out.append(self._collate(key, reqs))
         self._pending.clear()
         return out
+
+    def tick(self, now: float, slack_s: float = 0.0) -> List[MicroBatch]:
+        """Deadline-aware flush (ISSUE 6): launch partial buckets whose
+        budget is at risk.
+
+        A bucket flushes when its OLDEST deadline-carrying request has
+        ``deadline_s - now <= slack_s`` — i.e. waiting any longer for the
+        bucket to fill would spend budget the launch itself still needs
+        (``slack_s`` is the caller's estimate of queueing + service time).
+        Buckets holding only best-effort requests never deadline-flush;
+        they wait for capacity or an explicit :meth:`drain`.
+        """
+        out = []
+        for key, reqs in list(self._pending.items()):
+            deadlines = [r.deadline_s for r in reqs
+                         if r.deadline_s is not None]
+            if not deadlines or min(deadlines) - now > slack_s:
+                continue
+            out.append(self._collate(key, reqs))
+            self.deadline_flushes += 1
+            del self._pending[key]
+        return out
+
+    def remove(self, rid: int) -> Optional[ServeRequest]:
+        """Un-stage a pending request by id (admission-control preemption);
+        returns it, or ``None`` when ``rid`` is not pending."""
+        for key, reqs in list(self._pending.items()):
+            for i, r in enumerate(reqs):
+                if r.rid == rid:
+                    reqs.pop(i)
+                    if not reqs:
+                        del self._pending[key]
+                    return r
+        return None
+
+    def lowest_priority_pending(self) -> Optional[ServeRequest]:
+        """The pending request overload shedding would evict first: lowest
+        priority, newest submission among equals (least sunk wait)."""
+        victim: Optional[ServeRequest] = None
+        for reqs in self._pending.values():
+            for r in reqs:
+                if victim is None or (r.priority, -r.t_submit) < (
+                        victim.priority, -victim.t_submit):
+                    victim = r
+        return victim
 
     @property
     def n_pending(self) -> int:

@@ -1,4 +1,5 @@
-"""Multi-queue dispatch — load balancing, backpressure, per-queue accounting.
+"""Multi-queue dispatch — load balancing, backpressure, fault-tolerant
+routing, per-queue accounting.
 
 One e-GPU instance is one in-order queue; a serving deployment runs several
 (possibly heterogeneous — different ``EGPUConfig`` presets, mirroring the
@@ -20,21 +21,50 @@ a ticket's outputs are realized, ``queue.drain(n)`` +
 ``queue.release_events(upto=n)`` return the worker's queue to O(in-flight)
 memory while the released events' modeled time/energy stay in the queue's
 running totals.
+
+Fault tolerance (ISSUE 6): a worker built with a
+:class:`~repro.serve.faults.FaultPlan` gates every ``_do_launch`` through
+the plan — injected failures raise :class:`InjectedFault` *before* any real
+work.  :meth:`MultiQueueDispatcher.dispatch` retries a failed micro-batch
+with capped exponential backoff, preferring a *different* lane each
+attempt; per-lane :class:`CircuitBreaker`\\ s quarantine repeat offenders
+(skipped by routing while OPEN) and re-admit them through half-open probe
+launches, so a blacked-out lane neither absorbs traffic nor stays banned
+after it recovers.  Because injected faults fire pre-launch and kernels are
+pure, a retried micro-batch is bit-identical to the fault-free path.
+
+Modeled virtual time: every launch also advances the lane's
+``modeled_busy_until`` on the server's clock timeline —
+``start = max(now, busy_until)``, ``done = start + fused.total_s`` — giving
+each ticket a deterministic machine-model completion time
+(``t_done_modeled``) that deadline checks and the overload benchmark's
+goodput gate use instead of wall-clock noise.
 """
 
 from __future__ import annotations
 
 import dataclasses
 import time
-from typing import List, Optional, Sequence, Tuple
-
-import jax
+from typing import Callable, List, Optional, Sequence, Set, Tuple
 
 from ..core.apu import APU
 from ..core.device import EGPUConfig
 from ..core.machine import PhaseBreakdown
 from ..core.runtime import Buffer, CommandGraph
 from .batching import MicroBatch
+from .faults import FaultPlan, InjectedFault, apply_spike
+
+
+class DispatchError(RuntimeError):
+    """A micro-batch exhausted every retry across the fleet.
+
+    ``retired`` carries tickets retired for backpressure during the failed
+    attempts — those launches were real and must still be finalized.
+    """
+
+    def __init__(self, msg: str, retired: Sequence["LaunchTicket"] = ()):
+        super().__init__(msg)
+        self.retired = tuple(retired)
 
 
 @dataclasses.dataclass
@@ -53,6 +83,10 @@ class LaunchTicket:
     #: events this launch appended to the launching worker's queue (one per
     #: node — launch-time binding, never the graph's capture queue)
     n_events: int = 0
+    #: machine-model completion time on the server's clock timeline:
+    #: ``max(t_launch, lane busy_until) + fused.total_s`` — deterministic,
+    #: used for deadline-violation checks and modeled goodput
+    t_done_modeled: Optional[float] = None
 
     @property
     def done(self) -> bool:
@@ -70,10 +104,17 @@ class QueueWorker:
     exceed it first retires the oldest outstanding ticket (waiting on its
     results and releasing its queue events), so a worker can never
     accumulate unbounded speculative work.
+
+    ``fault_plan`` (ISSUE 6) hooks deterministic fault injection into
+    :meth:`_do_launch`; ``clock`` is the time source every timestamp on
+    this lane uses — the overload benchmark injects a virtual clock so the
+    whole serving timeline becomes machine-model-deterministic.
     """
 
     def __init__(self, config: EGPUConfig, name: Optional[str] = None,
-                 max_in_flight: int = 2, explicit_transfers: bool = True):
+                 max_in_flight: int = 2, explicit_transfers: bool = True,
+                 fault_plan: Optional[FaultPlan] = None,
+                 clock: Callable[[], float] = time.perf_counter):
         if max_in_flight < 1:
             raise ValueError("max_in_flight must be >= 1")
         # Host API v2 (default): the worker's captures move each
@@ -87,7 +128,14 @@ class QueueWorker:
         self.queue = self.apu.queue
         self.name = name or config.name
         self.max_in_flight = max_in_flight
+        self.fault_plan = fault_plan
+        self.clock = clock
         self._inflight: List[LaunchTicket] = []
+        self._launch_seq = 0             # fault-plan launch index (attempts)
+        #: machine-model time this lane is busy until (server clock
+        #: timeline); launches queue behind it, giving deterministic
+        #: per-ticket modeled completion times
+        self.modeled_busy_until = 0.0
         # accounting
         self.n_batches = 0
         self.n_requests = 0
@@ -95,37 +143,82 @@ class QueueWorker:
         self.energy_j = 0.0
         self.peak_in_flight = 0
         self.backpressure_stalls = 0
+        self.launch_failures = 0         # injected faults this lane absorbed
 
     @property
     def depth(self) -> int:
         return len(self._inflight)
 
+    @property
+    def inflight_requests(self) -> int:
+        """Live requests across this lane's in-flight tickets (admission
+        control counts them as queue depth)."""
+        return sum(t.batch.n_requests for t in self._inflight)
+
     # -- launch / retire ----------------------------------------------------
+    def _fault_gate(self) -> float:
+        """The :class:`FaultPlan` hook at the top of every ``_do_launch``.
+
+        Draws this lane's fate for the current launch index: raises
+        :class:`InjectedFault` (launch failure / blackout) *before* any
+        real work, or returns the latency spike to fold into the modeled
+        breakdown (0.0 for a clean launch or no plan).
+        """
+        idx = self._launch_seq
+        self._launch_seq += 1
+        if self.fault_plan is None:
+            return 0.0
+        decision = self.fault_plan.draw(self.name, idx)
+        if decision.fail:
+            self.launch_failures += 1
+            raise InjectedFault(
+                f"injected fault on lane {self.name!r} launch {idx}: "
+                f"{decision.reason}",
+                lane=self.name, launch_idx=idx, reason=decision.reason)
+        return decision.spike_s
+
     def _do_launch(self, graph: CommandGraph, batch: MicroBatch
                    ) -> Tuple[Tuple[Buffer, ...],
                               Optional[PhaseBreakdown], float]:
         """Fire one launch and return (outputs, fused breakdown, energy).
 
-        The subclass hook :class:`~repro.serve.sharded.ShardedWorker`
+        Gated by :meth:`_fault_gate` (ISSUE 6) — an injected failure raises
+        before the graph runs, so retries replay identical pure code.  The
+        subclass hook :class:`~repro.serve.sharded.ShardedWorker`
         overrides: it binds the launch to its mesh and scales the modeled
         breakdown by the shard count actually applied."""
+        spike_s = self._fault_gate()
         outs = graph.launch_prefix(batch.inputs, queue=self.queue)
         fused, energy = graph.fused_modeled()   # memoized: launch-invariant
-        return outs, fused, energy
+        return outs, apply_spike(fused, spike_s), energy
 
-    def launch(self, graph: CommandGraph, batch: MicroBatch
+    def launch(self, graph: CommandGraph, batch: MicroBatch,
+               t_now: Optional[float] = None
                ) -> Tuple[LaunchTicket, List[LaunchTicket]]:
         """Launch ``batch`` through ``graph``; returns the new ticket plus
-        any tickets retired to stay under the in-flight bound."""
+        any tickets retired to stay under the in-flight bound.
+
+        On an :class:`InjectedFault` the already-retired tickets ride out
+        on the exception's ``retired`` attribute — their launches were
+        real and the caller must still finalize them."""
         retired = []
         while len(self._inflight) >= self.max_in_flight:
             self.backpressure_stalls += 1
             retired.append(self._retire_oldest())
-        outs, fused, energy = self._do_launch(graph, batch)
+        try:
+            outs, fused, energy = self._do_launch(graph, batch)
+        except InjectedFault as e:
+            e.retired = tuple(retired)
+            raise
+        t_now = self.clock() if t_now is None else t_now
+        start = max(t_now, self.modeled_busy_until)
+        t_done_modeled = start + (fused.total_s if fused is not None else 0.0)
+        self.modeled_busy_until = t_done_modeled
         ticket = LaunchTicket(batch=batch, outputs=outs, worker=self,
                               fused=fused, energy_j=energy,
-                              t_launch=time.perf_counter(),
-                              n_events=len(graph.nodes))
+                              t_launch=t_now,
+                              n_events=len(graph.nodes),
+                              t_done_modeled=t_done_modeled)
         self._inflight.append(ticket)
         self.peak_in_flight = max(self.peak_in_flight, len(self._inflight))
         self.n_batches += 1
@@ -137,16 +230,23 @@ class QueueWorker:
 
     def _retire_oldest(self) -> LaunchTicket:
         ticket = self._inflight.pop(0)
-        for b in ticket.outputs:
-            if isinstance(b.data, jax.Array):
-                b.data.block_until_ready()
-        # Release exactly this launch's event segment.  Every launch binds
-        # to THIS worker's queue and tickets retire oldest-first, so the
-        # segment at the queue head is this ticket's own — even when the
-        # graph itself is a cached entry shared with sibling workers.
-        self.queue.drain(ticket.n_events)
-        self.queue.release_events(upto=ticket.n_events)
-        ticket.t_done = time.perf_counter()
+        try:
+            for b in ticket.outputs:
+                data = b.data
+                if hasattr(data, "block_until_ready"):
+                    data.block_until_ready()
+        finally:
+            # Release exactly this launch's event segment.  Every launch
+            # binds to THIS worker's queue and tickets retire oldest-first,
+            # so the segment at the queue head is this ticket's own — even
+            # when the graph itself is a cached entry shared with sibling
+            # workers.  Regression (ISSUE 6): the drain/release MUST run
+            # even when realization raises — the ticket is already popped,
+            # and skipping the segment release would permanently skew this
+            # lane's per-queue accounting against every later ticket.
+            self.queue.drain(ticket.n_events)
+            self.queue.release_events(upto=ticket.n_events)
+            ticket.t_done = self.clock()
         return ticket
 
     def drain(self) -> List[LaunchTicket]:
@@ -169,7 +269,8 @@ class QueueWorker:
             batches=self.n_batches, requests=self.n_requests,
             modeled_s=self.modeled_s, energy_j=self.energy_j,
             peak_in_flight=self.peak_in_flight,
-            backpressure_stalls=self.backpressure_stalls)
+            backpressure_stalls=self.backpressure_stalls,
+            launch_failures=self.launch_failures)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -193,10 +294,73 @@ class QueueStats:
     #: axis's devices a launch's sharding actually exploited (a
     #: divisibility fallback to replication shows up as < 1.0 here)
     mesh_utilization: Tuple[Tuple[str, float], ...] = ()
+    #: injected faults this lane absorbed (ISSUE 6 fault plans)
+    launch_failures: int = 0
+    #: this lane's circuit-breaker state at report time
+    breaker_state: str = "closed"
+    #: times this lane's breaker tripped OPEN (quarantines)
+    breaker_trips: int = 0
+
+
+class CircuitBreaker:
+    """Per-lane quarantine with half-open recovery probes.
+
+    CLOSED lanes route normally.  ``failure_threshold`` *consecutive*
+    failures trip the breaker OPEN: routing skips the lane for ``cooldown``
+    dispatcher ticks (dispatch calls, not wall time — deterministic under
+    virtual clocks).  After the cooldown the breaker goes HALF-OPEN and
+    admits exactly one probe launch: success closes it, failure re-opens
+    it for another cooldown.  A failure while half-open always re-trips
+    (one strike), the classic breaker asymmetry.
+    """
+
+    def __init__(self, failure_threshold: int = 3, cooldown: int = 8):
+        if failure_threshold < 1:
+            raise ValueError("failure_threshold must be >= 1")
+        if cooldown < 1:
+            raise ValueError("cooldown must be >= 1")
+        self.failure_threshold = failure_threshold
+        self.cooldown = cooldown
+        self.state = "closed"
+        self.consecutive_failures = 0
+        self.opened_at_tick = 0
+        self.trips = 0
+        self._probe_in_flight = False
+
+    def available(self, tick: int) -> bool:
+        """May this lane take traffic at dispatcher tick ``tick``?  (Also
+        performs the OPEN -> HALF-OPEN transition once the cooldown
+        elapses.)"""
+        if self.state == "open" and \
+                tick - self.opened_at_tick >= self.cooldown:
+            self.state = "half-open"
+            self._probe_in_flight = False
+        if self.state == "closed":
+            return True
+        return self.state == "half-open" and not self._probe_in_flight
+
+    def on_attempt(self) -> None:
+        if self.state == "half-open":
+            self._probe_in_flight = True
+
+    def record_success(self) -> None:
+        self.consecutive_failures = 0
+        self.state = "closed"
+        self._probe_in_flight = False
+
+    def record_failure(self, tick: int) -> None:
+        self.consecutive_failures += 1
+        if (self.state == "half-open"
+                or self.consecutive_failures >= self.failure_threshold):
+            self.state = "open"
+            self.opened_at_tick = tick
+            self.trips += 1
+            self.consecutive_failures = 0
+            self._probe_in_flight = False
 
 
 class MultiQueueDispatcher:
-    """Route micro-batches to the least-loaded worker.
+    """Route micro-batches to the least-loaded *available* worker.
 
     "Least loaded" is in-flight depth first; depth ties break on **modeled
     seconds per request** — the machine model's view of each lane's speed —
@@ -207,15 +371,38 @@ class MultiQueueDispatcher:
     a slower sibling at equal depth.  Workers with no model data yet
     (cold, or unprofiled) fall back to requests served, and are preferred
     at equal depth so every lane bootstraps its model quickly.
+
+    Fault tolerance (ISSUE 6): :meth:`dispatch` is the retrying front —
+    an :class:`InjectedFault` reroutes the micro-batch to a different lane
+    under capped exponential backoff; per-lane :class:`CircuitBreaker`\\ s
+    quarantine lanes that fail ``failure_threshold`` times in a row and
+    re-admit them via half-open probes after ``breaker_cooldown`` dispatch
+    ticks.  A batch that exhausts every retry raises
+    :class:`DispatchError` so the server can shed it loudly.
     """
 
-    def __init__(self, workers: Sequence[QueueWorker]):
+    def __init__(self, workers: Sequence[QueueWorker],
+                 failure_threshold: int = 3, breaker_cooldown: int = 8,
+                 max_attempts: Optional[int] = None,
+                 backoff_base_s: float = 0.001,
+                 backoff_cap_s: float = 0.05):
         if not workers:
             raise ValueError("need at least one QueueWorker")
         names = [w.name for w in workers]
         if len(set(names)) != len(names):
             raise ValueError(f"duplicate worker names: {names}")
+        if max_attempts is not None and max_attempts < 1:
+            raise ValueError("max_attempts must be >= 1")
         self.workers = list(workers)
+        self.breakers = {w.name: CircuitBreaker(failure_threshold,
+                                                breaker_cooldown)
+                         for w in workers}
+        self.max_attempts = max_attempts
+        self.backoff_base_s = backoff_base_s
+        self.backoff_cap_s = backoff_cap_s
+        self._tick = 0                   # dispatch calls (breaker clock)
+        self.retries = 0                 # failed attempts that were rerouted
+        self.dispatch_failures = 0       # batches that exhausted every retry
 
     @staticmethod
     def _route_key(w: QueueWorker) -> Tuple[float, int, float, int]:
@@ -227,9 +414,80 @@ class MultiQueueDispatcher:
         # first worker in declaration order
         return (w.depth, 1, spr, w.n_requests)
 
-    def pick(self) -> QueueWorker:
-        """The worker the next micro-batch should go to (see class doc)."""
-        return min(self.workers, key=self._route_key)
+    def available_workers(self) -> List[QueueWorker]:
+        """Lanes routing may use right now: breaker CLOSED, or HALF-OPEN
+        with a free probe slot.  Falls back to the whole fleet when every
+        breaker is open — the dispatcher degrades to forced probes rather
+        than refusing service outright."""
+        avail = [w for w in self.workers
+                 if self.breakers[w.name].available(self._tick)]
+        return avail or list(self.workers)
+
+    def pick(self, exclude: Sequence[str] = ()) -> QueueWorker:
+        """The worker the next micro-batch should go to (see class doc).
+        ``exclude`` names lanes that already failed this batch — they are
+        only reconsidered when no other lane is left."""
+        excluded: Set[str] = set(exclude)
+        candidates = [w for w in self.available_workers()
+                      if w.name not in excluded]
+        if not candidates:
+            candidates = [w for w in self.workers if w.name not in excluded]
+        if not candidates:
+            candidates = self.workers
+        return min(candidates, key=self._route_key)
+
+    def dispatch(self, batch: MicroBatch,
+                 graph_for: Callable[[QueueWorker], CommandGraph],
+                 t_now: Optional[float] = None
+                 ) -> Tuple[LaunchTicket, List[LaunchTicket]]:
+        """Launch ``batch`` with retry + quarantine (the fault-tolerant
+        front the server uses).
+
+        ``graph_for(worker)`` supplies the worker's cached graph (graphs
+        are per-APU/placement, so the cache lookup happens per attempt).
+        Returns the successful ticket plus every ticket retired for
+        backpressure along the way — including by failed attempts.  Raises
+        :class:`DispatchError` (carrying those retired tickets) when the
+        attempt budget is exhausted.
+        """
+        self._tick += 1
+        cap = (self.max_attempts if self.max_attempts is not None
+               else 2 * len(self.workers))
+        retired_all: List[LaunchTicket] = []
+        tried: Set[str] = set()
+        last: Optional[InjectedFault] = None
+        for attempt in range(cap):
+            worker = self.pick(exclude=tried)
+            breaker = self.breakers[worker.name]
+            breaker.on_attempt()
+            try:
+                ticket, retired = worker.launch(graph_for(worker), batch,
+                                                t_now=t_now)
+            except InjectedFault as e:
+                retired_all.extend(e.retired)
+                breaker.record_failure(self._tick)
+                tried.add(worker.name)
+                if len(tried) >= len(self.workers):
+                    tried.clear()        # second pass over the fleet
+                last = e
+                if attempt + 1 < cap:
+                    self.retries += 1
+                    if self.backoff_base_s > 0.0:
+                        time.sleep(min(self.backoff_cap_s,
+                                       self.backoff_base_s * (2 ** attempt)))
+                continue
+            breaker.record_success()
+            retired_all.extend(retired)
+            return ticket, retired_all
+        self.dispatch_failures += 1
+        raise DispatchError(
+            f"micro-batch of {batch.n_requests} request(s) failed all "
+            f"{cap} dispatch attempts (last: {last})",
+            retired=retired_all) from last
+
+    def quarantines(self) -> int:
+        """Total circuit-breaker trips across the fleet."""
+        return sum(b.trips for b in self.breakers.values())
 
     def drain_all(self) -> List[LaunchTicket]:
         out: List[LaunchTicket] = []
@@ -238,4 +496,9 @@ class MultiQueueDispatcher:
         return out
 
     def stats(self) -> Tuple[QueueStats, ...]:
-        return tuple(w.stats() for w in self.workers)
+        out = []
+        for w in self.workers:
+            b = self.breakers[w.name]
+            out.append(dataclasses.replace(
+                w.stats(), breaker_state=b.state, breaker_trips=b.trips))
+        return tuple(out)

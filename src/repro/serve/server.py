@@ -11,10 +11,35 @@ on steady-state traffic therefore performs **zero** re-captures / re-jits:
 every launch is a cached-graph replay, paying Tiny-OpenCL startup +
 scheduling once per micro-batch (paper §IV-B residency, scaled out).
 
+The open-loop front door (ISSUE 6) makes the engine survivable, not just
+fast:
+
+* **SLO intake** — ``submit(..., deadline=budget_s, priority=...)`` runs
+  modeled-capacity admission control: the predicted completion (per-lane
+  ``modeled_s_per_request()`` x queue depth, plus the lane's modeled
+  backlog) is checked against the deadline budget, and infeasible or
+  queue-full requests are shed with a loud :class:`AdmissionError` instead
+  of queueing unboundedly.  ``max_pending`` bounds the staged queue; a
+  higher-priority request may preempt a lower-priority pending one rather
+  than be shed itself.
+* **Deadline-aware flushing** — every submit (and the explicit
+  :meth:`tick`) pumps :meth:`BucketBatcher.tick`, launching partial
+  buckets whose oldest request's budget is at risk, so a lonely
+  deadline-carrying request is not held hostage waiting for its bucket to
+  fill.
+* **Fault-tolerant dispatch** — launches route through
+  :meth:`MultiQueueDispatcher.dispatch`: injected/lane failures retry on a
+  different lane with capped backoff, repeat offenders are quarantined
+  behind circuit breakers, and a batch that exhausts every retry is shed
+  loudly (``result()`` on its requests raises :class:`AdmissionError`
+  naming the reason — no request is ever silently lost).
+
 :meth:`Server.report` rolls the per-queue machine-model accounting into a
 :class:`ServeReport`: measured requests/s, modeled per-request latency
-percentiles (each request experiences its batch's fused-chain latency) and
-modeled energy per request.
+percentiles (each request experiences its batch's fused-chain latency),
+modeled energy per request, and the robustness counters — goodput
+(in-deadline completions/s, measured and modeled), sheds, deadline
+violations, retries and quarantines.
 """
 
 from __future__ import annotations
@@ -22,7 +47,8 @@ from __future__ import annotations
 import dataclasses
 import time
 from collections import OrderedDict, deque
-from typing import Any, Deque, Dict, Optional, Sequence, Tuple, Union
+from typing import (Any, Callable, Deque, Dict, Optional, Sequence, Tuple,
+                    Union)
 
 import jax.numpy as jnp
 import numpy as np
@@ -31,9 +57,21 @@ from ..core.apu import Stage
 from ..core.device import EGPUConfig, EGPU_16T
 from .batching import BucketBatcher, MicroBatch, batched_stages
 from .cache import GraphCache, stages_signature
-from .dispatch import LaunchTicket, MultiQueueDispatcher, QueueStats, QueueWorker
+from .dispatch import (DispatchError, LaunchTicket, MultiQueueDispatcher,
+                       QueueStats, QueueWorker)
+from .faults import FaultPlan
 
 PERCENTILES = (50, 90, 99)
+
+
+class AdmissionError(RuntimeError):
+    """A request shed by admission control (or fault-exhausted dispatch).
+
+    Raised from :meth:`Server.submit` when a request is rejected at the
+    door, and from :meth:`Server.result` when an *accepted* request was
+    shed later (priority preemption, dispatch exhaustion) — shedding is
+    always loud, never a silent drop.
+    """
 
 
 @dataclasses.dataclass(frozen=True)
@@ -62,6 +100,26 @@ class ServeReport:
     #: completed results dropped by the bounded LRU store (not fetched or
     #: ``keep``-refreshed within the last ``metrics_window`` completions)
     results_evicted: int = 0
+    # -- robustness counters (ISSUE 6) --------------------------------------
+    #: requests shed: admission rejects + priority preemptions + batches
+    #: that exhausted every dispatch retry
+    n_shed: int = 0
+    #: completed requests whose modeled completion missed their deadline
+    n_deadline_violations: int = 0
+    #: in-deadline completions per measured wall second (requests without a
+    #: deadline count as in-deadline)
+    goodput_per_s: float = 0.0
+    #: in-deadline completions per *modeled* second (machine-model
+    #: makespan) — deterministic, the overload benchmark's gated number
+    goodput_per_s_modeled: float = 0.0
+    #: partial buckets launched because a deadline budget was at risk
+    deadline_flushes: int = 0
+    #: failed launch attempts rerouted to another lane
+    n_retries: int = 0
+    #: micro-batches that exhausted every dispatch retry (then shed)
+    n_dispatch_failures: int = 0
+    #: circuit-breaker trips across the fleet (lane quarantines)
+    n_quarantines: int = 0
 
     def summary(self) -> str:
         lines = [
@@ -81,6 +139,20 @@ class ServeReport:
             f"{self.cache['evictions']} evictions "
             f"({self.cache['entries']}/{self.cache['capacity']} resident)",
         ]
+        if (self.n_shed or self.n_deadline_violations
+                or self.deadline_flushes):
+            lines.append(
+                f"slo             goodput {self.goodput_per_s_modeled:,.0f} "
+                f"req/s modeled ({self.goodput_per_s:,.0f} measured)  "
+                f"{self.n_shed} shed  "
+                f"{self.n_deadline_violations} deadline misses  "
+                f"{self.deadline_flushes} deadline flushes")
+        if (self.n_retries or self.n_quarantines
+                or self.n_dispatch_failures):
+            lines.append(
+                f"faults          {self.n_retries} retries  "
+                f"{self.n_quarantines} quarantines  "
+                f"{self.n_dispatch_failures} dispatch failures")
         if self.mesh_utilization:
             lines.append("mesh util       " + "  ".join(
                 f"{axis} {util:.0%}"
@@ -91,12 +163,16 @@ class ServeReport:
         for qs in self.queues:
             mesh = ("" if not qs.mesh_axes else "  mesh " + "x".join(
                 f"{a}={s}" for a, s in qs.mesh_axes))
+            breaker = ("" if qs.breaker_state == "closed"
+                       and not qs.launch_failures else
+                       f"  faults {qs.launch_failures} "
+                       f"(breaker {qs.breaker_state})")
             lines.append(
                 f"  queue {qs.name:12s} {qs.batches:4d} batches "
                 f"{qs.requests:5d} reqs  modeled {qs.modeled_s * 1e3:8.2f} ms "
                 f"{qs.energy_j * 1e6:8.1f} uJ  peak in-flight "
                 f"{qs.peak_in_flight} ({qs.backpressure_stalls} stalls)"
-                + mesh)
+                + mesh + breaker)
         return "\n".join(lines)
 
 
@@ -112,6 +188,20 @@ class Server:
     slice.  Heterogeneous mixes are fine, each lane gets its own cached
     graphs.
 
+    Robustness knobs (ISSUE 6):
+
+    * ``max_pending`` — bound on staged (pre-launch) requests; beyond it
+      submits shed (or preempt a lower-priority pending request).
+      ``None`` keeps the historical unbounded-queue behavior.
+    * ``admission`` / ``deadline_flush`` — disable the SLO machinery for
+      A/B baselines (the overload benchmark's no-shed FIFO arm).
+    * ``fault_plan`` — a :class:`~repro.serve.faults.FaultPlan` installed
+      on every lane the server constructs (pre-built workers keep their
+      own unless they have none).
+    * ``clock`` — time source for the whole engine (workers included);
+      the overload benchmark injects a virtual clock to make the entire
+      serving timeline machine-model-deterministic.
+
     Pipeline contract: kernels must be pad-stable along axis 0 of each
     request array (see :mod:`repro.serve.batching`).
     """
@@ -123,14 +213,34 @@ class Server:
                  max_batch: int = 4, max_in_flight: int = 2,
                  cache_capacity: int = 32, fill: float | int = 0,
                  crop_outputs: bool = True,
-                 metrics_window: int = 100_000):
+                 metrics_window: int = 100_000,
+                 max_pending: Optional[int] = None,
+                 admission: bool = True, deadline_flush: bool = True,
+                 fault_plan: Optional[FaultPlan] = None,
+                 breaker_threshold: int = 3, breaker_cooldown: int = 8,
+                 clock: Callable[[], float] = time.perf_counter):
         self.stages = tuple(stages)
+        self.clock = clock
+        self.max_pending = max_pending
+        self.admission = admission
+        self.deadline_flush = deadline_flush
         self.batcher = BucketBatcher(bucket_sizes, max_batch=max_batch,
                                      fill=fill, crop_outputs=crop_outputs)
-        self.dispatcher = MultiQueueDispatcher([
-            w if isinstance(w, QueueWorker) else
-            QueueWorker(w, name=f"{i}:{w.name}", max_in_flight=max_in_flight)
-            for i, w in enumerate(workers)])
+        lanes = []
+        for i, w in enumerate(workers):
+            if isinstance(w, QueueWorker):
+                if fault_plan is not None and w.fault_plan is None:
+                    w.fault_plan = fault_plan
+                if clock is not time.perf_counter:
+                    w.clock = clock
+                lanes.append(w)
+            else:
+                lanes.append(QueueWorker(
+                    w, name=f"{i}:{w.name}", max_in_flight=max_in_flight,
+                    fault_plan=fault_plan, clock=clock))
+        self.dispatcher = MultiQueueDispatcher(
+            lanes, failure_threshold=breaker_threshold,
+            breaker_cooldown=breaker_cooldown)
         self.cache = GraphCache(cache_capacity)
         # Every micro-batch is padded to max_batch, so ONE batched pipeline
         # covers all traffic; its (const-hashing) signature is computed once
@@ -147,6 +257,12 @@ class Server:
         self._results_window = max(1, int(metrics_window))
         self._results_evicted = 0
         self._evicted_upto = -1          # highest rid ever evicted unread
+        # Accepted-then-shed requests (priority preemption, dispatch
+        # exhaustion): rid -> reason.  Bounded like the results store so a
+        # long-lived overloaded server stays O(window); result() raises a
+        # loud AdmissionError for these.
+        self._shed: "OrderedDict[int, str]" = OrderedDict()
+        self.n_shed = 0                  # all sheds, incl. door rejects
         # Bounded metric windows: percentiles/means in report() describe the
         # last `metrics_window` requests, so a long-lived server's metric
         # memory is O(window), matching the O(in-flight) queue contract.
@@ -154,8 +270,11 @@ class Server:
         self._modeled_cost: Deque[float] = deque(maxlen=metrics_window)
         self._modeled_energy: Deque[float] = deque(maxlen=metrics_window)
         self._n_done = 0
+        self._n_in_deadline = 0
+        self._n_deadline_violations = 0
         self._t0: Optional[float] = None
         self._t_last: Optional[float] = None
+        self._t_last_modeled: Optional[float] = None
 
     # -- warm-up ------------------------------------------------------------
     def warmup(self, *example_arrays: Any) -> int:
@@ -183,24 +302,136 @@ class Server:
         return captured
 
     # -- request intake -----------------------------------------------------
-    def submit(self, *arrays: Any) -> int:
-        """Enqueue one request; full buckets launch immediately.
+    def submit(self, *arrays: Any, deadline: Optional[float] = None,
+               priority: int = 0) -> int:
+        """Enqueue one request; full (or deadline-at-risk) buckets launch
+        immediately.
 
-        Returns the request id; fetch its outputs with :meth:`result` after
-        a :meth:`flush` (or once enough same-bucket traffic flushed it
-        naturally)."""
-        now = time.perf_counter()
+        ``deadline`` is a *budget* in seconds from now (the request's
+        absolute deadline is ``now + deadline`` on the server's clock);
+        ``priority`` is its scheduling priority — under overload a
+        higher-priority request may preempt a lower-priority pending one
+        instead of being shed.  Raises :class:`AdmissionError` when
+        admission control sheds the request (queue full, or the modeled
+        capacity cannot meet the deadline), without consuming a request
+        id.  Returns the request id; fetch its outputs with
+        :meth:`result` after a :meth:`flush` (or once enough same-bucket
+        traffic flushed it naturally)."""
+        now = self.clock()
+        if deadline is not None:
+            deadline = float(deadline)
+            if deadline <= 0.0:
+                raise ValueError(
+                    f"deadline must be a positive budget in seconds, "
+                    f"got {deadline}")
+        self._admit(now, deadline, priority)
+        req = self.batcher.submit(
+            *arrays, t_submit=now,
+            deadline_s=None if deadline is None else now + deadline,
+            priority=priority)
+        # Start the wall clock only once a request is actually ACCEPTED
+        # (regression, ISSUE 6): stamping before batcher.submit charged
+        # servers whose first submit was rejected (oversize, shed) for
+        # idle time they never served, skewing requests/s.
         if self._t0 is None:
             self._t0 = now
-        req = self.batcher.submit(*arrays, t_submit=now)
         self._launch(self.batcher.pop_full())
+        if self.deadline_flush:
+            self._launch(self.batcher.tick(now, slack_s=self._flush_slack()))
         return req.rid
+
+    def tick(self, now: Optional[float] = None) -> None:
+        """Deadline pump for idle periods: launch any partial bucket whose
+        oldest request's budget is at risk (callers with open-loop traffic
+        should call this between arrivals)."""
+        if not self.deadline_flush:
+            return
+        now = self.clock() if now is None else now
+        self._launch(self.batcher.tick(now, slack_s=self._flush_slack()))
 
     def flush(self) -> None:
         """Force every pending request through: drain partial buckets, then
         retire all in-flight launches."""
         self._launch(self.batcher.drain())
         self._finalize(self.dispatcher.drain_all())
+
+    # -- admission control --------------------------------------------------
+    def _best_spr(self) -> Optional[float]:
+        """The fleet's best modeled seconds-per-request across currently
+        available (non-quarantined) lanes; ``None`` while unprofiled."""
+        sprs = [s for s in (w.modeled_s_per_request()
+                            for w in self.dispatcher.available_workers())
+                if s is not None]
+        return min(sprs) if sprs else None
+
+    def _predicted_completion_s(self, now: float) -> Optional[float]:
+        """Modeled seconds until a request submitted *now* would complete:
+        the earliest lane's modeled backlog, plus the queue ahead of it
+        (staged + in-flight requests, split across the available lanes)
+        served at the best lane's modeled seconds-per-request, plus its
+        own service.  ``None`` while the fleet is unprofiled (cold servers
+        admit everything and bootstrap)."""
+        lanes = self.dispatcher.available_workers()
+        spr = self._best_spr()
+        if spr is None:
+            return None
+        backlog = min(max(0.0, w.modeled_busy_until - now) for w in lanes)
+        depth = (self.batcher.n_pending
+                 + sum(w.inflight_requests for w in lanes))
+        return backlog + spr * (depth / max(1, len(lanes)) + 1.0)
+
+    def _flush_slack(self) -> float:
+        """Remaining-budget threshold at which a partial bucket must
+        launch: the modeled backlog ahead of it plus one full batch's
+        service — waiting longer would eat time the launch itself needs."""
+        spr = self._best_spr()
+        if spr is None:
+            return 0.0
+        now = self.clock()
+        backlog = min((max(0.0, w.modeled_busy_until - now)
+                       for w in self.dispatcher.available_workers()),
+                      default=0.0)
+        return backlog + spr * self.batcher.max_batch
+
+    def _admit(self, now: float, deadline: Optional[float],
+               priority: int) -> None:
+        """Shed (raise :class:`AdmissionError`) instead of queueing
+        unboundedly — see class docstring."""
+        if not self.admission:
+            return
+        if (self.max_pending is not None
+                and self.batcher.n_pending >= self.max_pending):
+            victim = self.batcher.lowest_priority_pending()
+            if victim is not None and victim.priority < priority:
+                # the new request outranks a staged one: preempt the
+                # lowest-priority pending request (loudly) and admit
+                self.batcher.remove(victim.rid)
+                self._record_shed(
+                    victim.rid,
+                    f"preempted while pending by a priority-{priority} "
+                    f"request (own priority {victim.priority}, queue full "
+                    f"at max_pending={self.max_pending})")
+            else:
+                self.n_shed += 1
+                raise AdmissionError(
+                    f"admission control shed request: {self.batcher.n_pending}"
+                    f" pending >= max_pending={self.max_pending} and "
+                    f"priority {priority} outranks no pending request")
+        if deadline is not None:
+            predicted = self._predicted_completion_s(now)
+            if predicted is not None and predicted > deadline:
+                self.n_shed += 1
+                raise AdmissionError(
+                    f"admission control shed request: predicted completion "
+                    f"{predicted * 1e3:.3f} ms exceeds the deadline budget "
+                    f"{deadline * 1e3:.3f} ms (modeled capacity, "
+                    f"{self.batcher.n_pending} staged)")
+
+    def _record_shed(self, rid: int, reason: str) -> None:
+        self._shed[rid] = reason
+        self.n_shed += 1
+        while len(self._shed) > self._results_window:
+            self._shed.popitem(last=False)
 
     # -- results ------------------------------------------------------------
     def result(self, rid: int, keep: bool = False) -> Tuple[Any, ...]:
@@ -211,8 +442,13 @@ class Server:
         fetched nor ``keep``-refreshed within the last ``metrics_window``
         completions are evicted, so a long-lived server stays O(window)
         even when clients never fetch — an evicted read raises
-        :class:`KeyError` with an explicit hint.
+        :class:`KeyError` with an explicit hint.  A request that was
+        accepted but later shed (priority preemption, dispatch
+        exhaustion) raises :class:`AdmissionError` naming the reason.
         """
+        if rid in self._shed:
+            raise AdmissionError(
+                f"request {rid} was shed after acceptance: {self._shed[rid]}")
         if rid not in self._results:
             evicted = (" (or it was evicted: results not read within the "
                        f"last {self._results_window} completions — "
@@ -236,11 +472,23 @@ class Server:
     # -- internals ----------------------------------------------------------
     def _launch(self, batches: Sequence[MicroBatch]) -> None:
         for batch in batches:
-            worker = self.dispatcher.pick()
-            graph, _hit = self.cache.get_or_capture(
-                worker.apu, self._bstages, batch.inputs,
-                key_prefix=self._bsig)
-            _ticket, retired = worker.launch(graph, batch)
+            def graph_for(worker: QueueWorker):
+                graph, _hit = self.cache.get_or_capture(
+                    worker.apu, self._bstages, batch.inputs,
+                    key_prefix=self._bsig)
+                return graph
+            try:
+                _ticket, retired = self.dispatcher.dispatch(
+                    batch, graph_for, t_now=self.clock())
+            except DispatchError as e:
+                # the batch exhausted every lane/retry: its launches never
+                # happened, so shed every carried request LOUDLY — the
+                # backpressure-retired tickets from failed attempts were
+                # real launches and still finalize below
+                self._finalize(e.retired)
+                for req in batch.requests:
+                    self._record_shed(req.rid, f"dispatch failed: {e}")
+                continue
             self._finalize(retired)
 
     def _finalize(self, tickets: Sequence[LaunchTicket]) -> None:
@@ -260,15 +508,31 @@ class Server:
                     self._modeled_latency.append(t.fused.total_s)
                     self._modeled_cost.append(t.fused.scaled(1.0 / n).total_s)
                     self._modeled_energy.append(t.energy_j / n)
+                # deadline accounting against the deterministic modeled
+                # completion time (requests without a deadline are always
+                # "in deadline" for goodput purposes)
+                if (req.deadline_s is not None
+                        and t.t_done_modeled is not None
+                        and t.t_done_modeled > req.deadline_s):
+                    self._n_deadline_violations += 1
+                else:
+                    self._n_in_deadline += 1
                 self._n_done += 1
             if t.t_done is not None:
                 self._t_last = (t.t_done if self._t_last is None
                                 else max(self._t_last, t.t_done))
+            if t.t_done_modeled is not None:
+                self._t_last_modeled = (
+                    t.t_done_modeled if self._t_last_modeled is None
+                    else max(self._t_last_modeled, t.t_done_modeled))
 
     # -- reporting ----------------------------------------------------------
     def report(self) -> ServeReport:
         wall = ((self._t_last - self._t0)
                 if self._t0 is not None and self._t_last is not None else 0.0)
+        modeled_span = ((self._t_last_modeled - self._t0)
+                        if self._t0 is not None
+                        and self._t_last_modeled is not None else 0.0)
         lat = np.asarray(self._modeled_latency, np.float64)
         pct = {p: (float(np.percentile(lat, p)) if lat.size else 0.0)
                for p in PERCENTILES}
@@ -303,4 +567,13 @@ class Server:
             cache=self.cache.stats(),
             mesh_utilization=mesh_util,
             results_evicted=self._results_evicted,
+            n_shed=self.n_shed,
+            n_deadline_violations=self._n_deadline_violations,
+            goodput_per_s=(self._n_in_deadline / wall if wall > 0 else 0.0),
+            goodput_per_s_modeled=(self._n_in_deadline / modeled_span
+                                   if modeled_span > 0 else 0.0),
+            deadline_flushes=self.batcher.deadline_flushes,
+            n_retries=self.dispatcher.retries,
+            n_dispatch_failures=self.dispatcher.dispatch_failures,
+            n_quarantines=self.dispatcher.quarantines(),
         )

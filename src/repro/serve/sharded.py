@@ -44,8 +44,9 @@ Contracts:
 from __future__ import annotations
 
 import dataclasses
+import time
 import weakref
-from typing import Any, Dict, Optional, Sequence, Tuple
+from typing import Any, Callable, Dict, Optional, Sequence, Tuple
 
 import jax
 import numpy as np
@@ -57,6 +58,7 @@ from ..core.runtime import Buffer, CommandGraph
 from ..distributed.sharding import ShardingRules, SERVE_RULES, spec_for
 from .batching import MicroBatch
 from .dispatch import QueueStats, QueueWorker
+from .faults import FaultPlan, apply_spike
 
 #: logical-axis name of the micro-batch leading dimension
 BATCH_AXIS = "batch"
@@ -114,7 +116,9 @@ class ShardedWorker(QueueWorker):
                  explicit_transfers: bool = True,
                  rules: ShardingRules = SERVE_RULES,
                  const_axes: Optional[Sequence[Optional[Sequence[
-                     Optional[str]]]]] = None):
+                     Optional[str]]]]] = None,
+                 fault_plan: Optional[FaultPlan] = None,
+                 clock: Callable[[], float] = time.perf_counter):
         if not isinstance(mesh, Mesh):
             raise TypeError(f"mesh must be a jax.sharding.Mesh, got "
                             f"{type(mesh).__name__}")
@@ -126,7 +130,8 @@ class ShardedWorker(QueueWorker):
                            tuple(None if a is None else tuple(a)
                                  for a in const_axes))
         super().__init__(config, name=name, max_in_flight=max_in_flight,
-                         explicit_transfers=explicit_transfers)
+                         explicit_transfers=explicit_transfers,
+                         fault_plan=fault_plan, clock=clock)
         # Cache identity: sharded captures must never collide with plain
         # single-device ones (or with a different mesh / rule table) in a
         # shared GraphCache.
@@ -226,6 +231,9 @@ class ShardedWorker(QueueWorker):
     def _do_launch(self, graph: CommandGraph, batch: MicroBatch
                    ) -> Tuple[Tuple[Buffer, ...],
                               Optional[PhaseBreakdown], float]:
+        # fault gate first — an injected failure fires before any real
+        # sharded work, exactly like the plain-lane path
+        spike_s = self._fault_gate()
         in_sh, out_sh, shards, axis_factor = self.shardings_for(graph)
         outs = graph.launch_prefix(batch.inputs, queue=self.queue,
                                    in_shardings=in_sh, out_shardings=out_sh)
@@ -236,6 +244,7 @@ class ShardedWorker(QueueWorker):
             # Energy is total work and stays unscaled — the same ops run,
             # just spread over more devices.
             fused = shard_breakdown(fused, shards)
+        fused = apply_spike(fused, spike_s)
         # utilization: fraction of each mesh axis this launch exploited —
         # any tensor's split counts (batch over data, consts over model);
         # fallback-to-replication reads as 1/size

@@ -661,3 +661,158 @@ def test_server_result_pops_by_default():
     np.testing.assert_array_equal(np.asarray(out), np.asarray(again))
     with pytest.raises(KeyError):
         srv.result(rid)                  # default read popped it
+
+
+# ---------------------------------------------------------------------------
+# Open-loop front door (ISSUE 6): satellites + SLO intake
+# ---------------------------------------------------------------------------
+class _Boom:
+    """A buffer payload whose realization fails (simulated device fault)."""
+
+    def block_until_ready(self):
+        raise RuntimeError("simulated realization failure")
+
+
+def test_retire_drains_segment_even_when_realization_raises():
+    """Regression (ISSUE 6): if block_until_ready() raises inside
+    _retire_oldest, the ticket is already popped — the drain/release of
+    its event segment must STILL run (finally), or the lane's per-queue
+    accounting is permanently skewed against every later ticket."""
+    stages = _mm_stages(n=2)
+    srv = Server(stages, workers=(EGPU_16T,), bucket_sizes=(8,),
+                 max_batch=1, max_in_flight=2)
+    rng = np.random.default_rng(13)
+    for _ in range(2):
+        srv.submit(jnp.asarray(rng.standard_normal((8, 8)), jnp.float32))
+    (worker,) = srv.dispatcher.workers
+    assert worker.depth == 2
+    oldest = worker._inflight[0]
+    n = oldest.n_events
+    oldest.outputs[0].data = _Boom()     # poison the oldest ticket
+    with pytest.raises(RuntimeError, match="simulated realization failure"):
+        worker._retire_oldest()
+    # the failure propagated, but the segment was drained + released
+    assert worker.queue.released_count == n
+    assert worker.depth == 1
+    # the lane is NOT poisoned: later tickets retire with exact accounting
+    srv.submit(jnp.asarray(rng.standard_normal((8, 8)), jnp.float32))
+    srv.flush()
+    assert worker.queue.released_count == 3 * n
+    assert worker.queue.events == () and worker.depth == 0
+
+
+def test_batcher_rejects_malformed_construction():
+    """Satellite (ISSUE 6): unsorted / duplicate / non-positive bucket
+    lists and max_batch < 1 fail loudly at construction, not obscurely at
+    bucket-selection time."""
+    with pytest.raises(ValueError, match="ascending"):
+        BucketBatcher((256, 64, 1024))
+    with pytest.raises(ValueError, match="duplicate"):
+        BucketBatcher((64, 64, 256))
+    with pytest.raises(ValueError, match="positive"):
+        BucketBatcher((0, 64))
+    with pytest.raises(ValueError, match="positive"):
+        BucketBatcher((-4, 64))
+    with pytest.raises(ValueError, match="at least one bucket"):
+        BucketBatcher(())
+    with pytest.raises(ValueError, match="max_batch"):
+        BucketBatcher((64,), max_batch=0)
+    # well-formed input still constructs
+    assert BucketBatcher((64, 256)).bucket_sizes == (64, 256)
+
+
+def test_rejected_first_submit_does_not_start_wall_clock():
+    """Satellite (ISSUE 6): _t0 is stamped only once a request is actually
+    ACCEPTED — a server whose first submit is rejected (oversize) must not
+    charge the idle gap before the first real request to its wall clock."""
+    stages = _mm_stages()
+    srv = Server(stages, workers=(EGPU_16T,), bucket_sizes=(8,), max_batch=1)
+    with pytest.raises(ValueError, match="oversize"):
+        srv.submit(jnp.zeros((99, 8), jnp.float32))
+    assert srv._t0 is None               # clock never started
+    srv.submit(jnp.ones((8, 8), jnp.float32))
+    assert srv._t0 is not None
+    srv.flush()
+    assert srv.report().n_requests == 1
+
+
+def test_admission_sheds_when_queue_full_and_preempts_by_priority():
+    """max_pending bounds the staged queue: an equal-priority submit sheds
+    loudly; a HIGHER-priority submit preempts the lowest-priority pending
+    request instead (whose result() then raises AdmissionError)."""
+    from repro.serve import AdmissionError
+    stages = _mm_stages()
+    srv = Server(stages, workers=(EGPU_16T,), bucket_sizes=(8,),
+                 max_batch=8, max_pending=2)
+    r0 = srv.submit(jnp.ones((8, 8), jnp.float32), priority=0)
+    r1 = srv.submit(jnp.ones((8, 8), jnp.float32), priority=1)
+    # queue full, same priority as the weakest pending: shed at the door
+    with pytest.raises(AdmissionError, match="max_pending"):
+        srv.submit(jnp.ones((8, 8), jnp.float32), priority=0)
+    assert srv.n_shed == 1
+    # higher priority: preempts r0 (lowest priority pending) and is admitted
+    r2 = srv.submit(2.0 * jnp.ones((8, 8), jnp.float32), priority=5)
+    assert srv.batcher.n_pending == 2
+    srv.flush()
+    with pytest.raises(AdmissionError, match="preempted"):
+        srv.result(r0)
+    for rid in (r1, r2):
+        (out,) = srv.result(rid)
+        assert np.asarray(out).shape == (8, 8)
+    rep = srv.report()
+    assert rep.n_shed == 2 and rep.n_requests == 2
+
+
+def test_admission_sheds_infeasible_deadline_and_deadline_flush():
+    """Modeled-capacity admission: once the fleet is profiled, a deadline
+    budget smaller than the predicted completion sheds at the door; a
+    feasible deadline-carrying request launches its PARTIAL bucket when
+    the budget is at risk (tick), instead of waiting for capacity."""
+    from repro.serve import AdmissionError
+    stages = _mm_stages()
+    t = [0.0]
+    srv = Server(stages, workers=(EGPU_16T,), bucket_sizes=(8,),
+                 max_batch=4, clock=lambda: t[0])
+    # profile the lane: one full batch through
+    for _ in range(4):
+        srv.submit(jnp.ones((8, 8), jnp.float32))
+    srv.flush()
+    assert srv.report().n_requests == 4
+    spr = srv.dispatcher.workers[0].modeled_s_per_request()
+    assert spr is not None and spr > 0
+    # an absurdly tight budget is infeasible -> shed loudly
+    with pytest.raises(AdmissionError, match="deadline budget"):
+        srv.submit(jnp.ones((8, 8), jnp.float32), deadline=spr * 1e-6)
+    assert srv.n_shed == 1
+    # a feasible budget is admitted; advancing the clock to the at-risk
+    # point deadline-flushes the partial (1/4-full) bucket
+    rid = srv.submit(jnp.ones((8, 8), jnp.float32), deadline=1000.0 * spr)
+    assert srv.batcher.n_pending == 1
+    t[0] += 999.0 * spr
+    srv.tick()
+    assert srv.batcher.n_pending == 0
+    assert srv.batcher.deadline_flushes == 1
+    srv.flush()
+    (out,) = srv.result(rid)
+    assert np.asarray(out).shape == (8, 8)
+    assert srv.report().deadline_flushes == 1
+
+
+def test_deadline_validation_and_violation_accounting():
+    """deadline must be a positive budget; a request whose modeled
+    completion exceeds its absolute deadline counts as a violation in the
+    report (completed late, not shed)."""
+    stages = _mm_stages()
+    t = [0.0]
+    srv = Server(stages, workers=(EGPU_16T,), bucket_sizes=(8,),
+                 max_batch=1, admission=False, clock=lambda: t[0])
+    with pytest.raises(ValueError, match="positive budget"):
+        srv.submit(jnp.ones((8, 8), jnp.float32), deadline=-1.0)
+    # admission off: an infeasible deadline is ACCEPTED, completes late
+    rid = srv.submit(jnp.ones((8, 8), jnp.float32), deadline=1e-12)
+    srv.flush()
+    (out,) = srv.result(rid)             # still completes, bit-identical
+    assert np.asarray(out).shape == (8, 8)
+    rep = srv.report()
+    assert rep.n_deadline_violations == 1
+    assert rep.n_shed == 0

@@ -1,0 +1,325 @@
+"""Open-loop front door under injected failures (ISSUE 6).
+
+Pins the robustness contracts: FaultPlan determinism, blackout-driven
+rerouting with bit-identical retried results, circuit-breaker
+trip/half-open-probe/recovery, latency spikes that inflate modeled time
+but never energy, loud shedding on dispatch exhaustion, and the
+none-silently-lost / bit-identical property over randomized fault plans
+(hypothesis where available, a seeded sweep everywhere).
+
+The CI fault-injection leg sets ``REPRO_FAULT_SEED``; probabilistic draws
+here go through :func:`repro.serve.env_seed` so every PR exercises the
+machinery under a fresh seed, while the assertions lean on
+seed-independent :class:`Blackout` windows and invariants (never on a
+particular draw landing).
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import APU, EGPU_16T, Kernel, Stage
+from repro.kernels.gemm.ref import counts as gemm_counts
+from repro.kernels.gemm.ref import gemm_ref
+from repro.serve import (AdmissionError, Blackout, CircuitBreaker,
+                         DispatchError, FaultPlan, InjectedFault, Server,
+                         env_seed)
+
+LANE0, LANE1 = "0:e-gpu-16t", "1:e-gpu-16t"   # Server's constructed names
+
+
+def _mm_stages(d=8, seed=0, n=2):
+    rng = np.random.default_rng(seed)
+    w = jnp.asarray(rng.standard_normal((d, d)) * 0.2, jnp.float32)
+
+    def mlp(x, w):
+        return jnp.maximum(gemm_ref(x, w), 0.0)
+
+    kern = Kernel("mlp", executor=mlp,
+                  counts=lambda **kw: gemm_counts(m=d, n=d, k=d))
+    return [Stage(kern, consts=(w,), n_inputs=1) for _ in range(n)]
+
+
+def _eager_ref(stages, x):
+    outs, _ = APU(EGPU_16T).offload(stages, (x,), mode="eager")
+    return np.asarray(outs[0].data)
+
+
+# ---------------------------------------------------------------------------
+# FaultPlan
+# ---------------------------------------------------------------------------
+def test_fault_plan_draw_is_deterministic_and_seed_sensitive():
+    kw = dict(p_launch_fail=0.3, p_latency_spike=0.5, latency_spike_s=0.1)
+    grid = [(lane, i) for lane in ("0:a", "1:b") for i in range(40)]
+    a = [FaultPlan(seed=5, **kw).draw(l, i) for l, i in grid]
+    b = [FaultPlan(seed=5, **kw).draw(l, i) for l, i in grid]
+    assert a == b                        # pure function of (seed, lane, idx)
+    c = [FaultPlan(seed=6, **kw).draw(l, i) for l, i in grid]
+    assert a != c                        # the seed actually matters
+    # decisions differ across lanes too (lane name is part of the key)
+    assert ([d for (l, _), d in zip(grid, a) if l == "0:a"]
+            != [d for (l, _), d in zip(grid, a) if l == "1:b"])
+
+
+def test_fault_plan_validates_inputs_and_blackout_covers():
+    with pytest.raises(ValueError, match="p_launch_fail"):
+        FaultPlan(p_launch_fail=1.5)
+    with pytest.raises(ValueError, match="p_latency_spike"):
+        FaultPlan(p_latency_spike=-0.1)
+    with pytest.raises(ValueError, match="latency_spike_s"):
+        FaultPlan(latency_spike_s=-1.0)
+    b = Blackout("x", start=3, length=2)
+    assert not b.covers("x", 2) and b.covers("x", 3) and b.covers("x", 4)
+    assert not b.covers("x", 5) and not b.covers("y", 3)
+    # a blackout fires regardless of the seed (deterministic recovery tests)
+    for seed in (0, 7, 12345):
+        d = FaultPlan(seed=seed, blackouts=(b,)).draw("x", 3)
+        assert d.fail and "blackout" in d.reason
+
+
+# ---------------------------------------------------------------------------
+# Rerouting + circuit breaker
+# ---------------------------------------------------------------------------
+def test_blackout_reroutes_retries_bit_identical():
+    """A lane blacked out for its first 4 launches: traffic reroutes to the
+    healthy sibling (retries), the offender quarantines and recovers via a
+    half-open probe, and EVERY result stays bit-identical to the fault-free
+    eager path — nothing is shed."""
+    stages = _mm_stages()
+    plan = FaultPlan(seed=env_seed(3),
+                     blackouts=(Blackout(LANE0, start=0, length=4),))
+    srv = Server(stages, workers=(EGPU_16T, EGPU_16T), bucket_sizes=(8,),
+                 max_batch=1, fault_plan=plan,
+                 breaker_threshold=2, breaker_cooldown=2)
+    rng = np.random.default_rng(17)
+    rids = []
+    for _ in range(8):
+        x = jnp.asarray(rng.standard_normal((8, 8)), jnp.float32)
+        rids.append((srv.submit(x), x))
+    srv.flush()
+    rep = srv.report()
+    assert rep.n_shed == 0 and rep.n_dispatch_failures == 0
+    assert rep.n_retries >= 1            # failed attempts were rerouted
+    assert rep.n_quarantines >= 1        # the breaker tripped at least once
+    assert plan.injected_failures == 4   # the whole window was absorbed
+    per = {q.name: q for q in rep.queues}
+    assert per[LANE0].launch_failures == 4
+    # the blacked-out lane RECOVERED: it serves again after the window
+    assert per[LANE0].batches >= 1 and per[LANE1].batches >= 1
+    assert per[LANE0].breaker_state == "closed"
+    for rid, x in rids:                  # bit-identical under retries
+        (got,) = srv.result(rid)
+        np.testing.assert_array_equal(np.asarray(got), _eager_ref(stages, x))
+
+
+def test_circuit_breaker_state_machine():
+    br = CircuitBreaker(failure_threshold=2, cooldown=3)
+    assert br.available(tick=1)
+    br.record_failure(1)
+    assert br.state == "closed" and br.available(2)   # below threshold
+    br.record_failure(2)                 # consecutive hit: trips OPEN
+    assert br.state == "open" and br.trips == 1
+    assert not br.available(3) and not br.available(4)
+    assert br.available(5)               # cooldown elapsed -> HALF-OPEN
+    assert br.state == "half-open"
+    br.on_attempt()                      # the single probe slot
+    assert not br.available(5)           # no second probe while in flight
+    br.record_failure(5)                 # probe failed: re-trips, one strike
+    assert br.state == "open" and br.trips == 2
+    assert br.available(8)               # next half-open window
+    br.on_attempt()
+    br.record_success()                  # probe succeeded: CLOSED again
+    assert br.state == "closed" and br.available(9)
+    br.record_failure(9)                 # success reset the consecutive count
+    assert br.state == "closed"
+    with pytest.raises(ValueError):
+        CircuitBreaker(failure_threshold=0)
+    with pytest.raises(ValueError):
+        CircuitBreaker(cooldown=0)
+
+
+def test_latency_spike_inflates_modeled_time_not_energy():
+    """A spiked launch models slower (scheduling stall) but burns no extra
+    energy and never perturbs outputs."""
+    stages = _mm_stages()
+    x = jnp.asarray(np.random.default_rng(2).standard_normal((8, 8)),
+                    jnp.float32)
+
+    def run(plan):
+        srv = Server(stages, workers=(EGPU_16T,), bucket_sizes=(8,),
+                     max_batch=1, fault_plan=plan)
+        rid = srv.submit(x)
+        srv.flush()
+        (out,) = srv.result(rid)
+        return np.asarray(out), srv.report()
+
+    clean_out, clean = run(None)
+    spike = FaultPlan(seed=env_seed(5), p_latency_spike=1.0,
+                      latency_spike_s=0.25)
+    spiked_out, rep = run(spike)
+    assert spike.injected_spikes == 1 and spike.injected_failures == 0
+    np.testing.assert_array_equal(spiked_out, clean_out)
+    assert rep.modeled_latency_s[50] == pytest.approx(
+        clean.modeled_latency_s[50] + 0.25, rel=1e-9)
+    assert rep.modeled_energy_per_request_j == pytest.approx(
+        clean.modeled_energy_per_request_j, rel=1e-9)
+    assert rep.n_retries == 0 and rep.n_shed == 0
+
+
+def test_dispatch_exhaustion_sheds_loudly_then_recovers():
+    """Every lane dead: the batch exhausts its retry budget and is shed
+    LOUDLY (result() raises AdmissionError, counters tick) — and once the
+    blackout windows pass, the very next request serves normally."""
+    stages = _mm_stages()
+    plan = FaultPlan(blackouts=(Blackout(LANE0, 0, 2), Blackout(LANE1, 0, 2)))
+    srv = Server(stages, workers=(EGPU_16T, EGPU_16T), bucket_sizes=(8,),
+                 max_batch=1, fault_plan=plan)
+    x = jnp.ones((8, 8), jnp.float32)
+    rid = srv.submit(x)                  # 4 attempts, all blacked out
+    with pytest.raises(AdmissionError, match="shed"):
+        srv.result(rid)
+    rep = srv.report()
+    assert rep.n_dispatch_failures == 1 and rep.n_shed == 1
+    assert plan.injected_failures == 4   # 2 attempts x 2 lanes consumed
+    # recovery: the windows are spent, the fleet serves again
+    rid2 = srv.submit(2.0 * x)
+    srv.flush()
+    (got,) = srv.result(rid2)
+    np.testing.assert_array_equal(np.asarray(got),
+                                  _eager_ref(stages, 2.0 * x))
+    assert srv.report().n_dispatch_failures == 1    # no new failures
+
+
+def test_injected_fault_carries_backpressure_retired_tickets():
+    """An InjectedFault raised mid-launch must hand back the tickets the
+    worker already retired for backpressure — those launches were real and
+    the dispatcher finalizes them even on the failure path."""
+    stages = _mm_stages()
+    # lane 0 fails its 3rd and 4th launches (the single-lane fleet's whole
+    # retry budget for one batch), after two clean ones
+    plan = FaultPlan(blackouts=(Blackout(LANE0, 2, 2),))
+    srv = Server(stages, workers=(EGPU_16T,), bucket_sizes=(8,),
+                 max_batch=1, max_in_flight=2, fault_plan=plan)
+    (worker,) = srv.dispatcher.workers
+    rng = np.random.default_rng(23)
+    xs = [jnp.asarray(rng.standard_normal((8, 8)), jnp.float32)
+          for _ in range(3)]
+    r0 = srv.submit(xs[0])
+    r1 = srv.submit(xs[1])
+    assert worker.depth == 2             # both in flight, window full
+    # 3rd launch: backpressure retires r0's ticket FIRST, then the fault
+    # fires; the single-lane fleet exhausts retries and sheds r2 — but
+    # r0's retired result must survive the failed dispatch
+    r2 = srv.submit(xs[2])
+    np.testing.assert_array_equal(np.asarray(srv.result(r0)[0]),
+                                  _eager_ref(stages, xs[0]))
+    with pytest.raises(AdmissionError, match="shed"):
+        srv.result(r2)
+    srv.flush()
+    np.testing.assert_array_equal(np.asarray(srv.result(r1)[0]),
+                                  _eager_ref(stages, xs[1]))
+
+
+def test_injected_fault_exposes_lane_and_launch_index():
+    plan = FaultPlan(blackouts=(Blackout("solo", 0, 1),))
+    from repro.serve import QueueWorker
+    w = QueueWorker(EGPU_16T, name="solo", fault_plan=plan)
+    with pytest.raises(InjectedFault) as ei:
+        w._fault_gate()
+    assert ei.value.lane == "solo" and ei.value.launch_idx == 0
+    assert "blackout" in ei.value.reason
+    assert w.launch_failures == 1
+    assert w._fault_gate() == 0.0        # next launch index is clean
+
+
+# ---------------------------------------------------------------------------
+# Property: none silently lost, bit-identical under any seeded plan
+# ---------------------------------------------------------------------------
+def _fault_scenario(seed, p_fail, p_spike, spike_s, blackout_len):
+    """Drive a 2-lane server through a random seeded FaultPlan and assert
+    the two ISSUE-6 invariants:
+
+    (a) every ACCEPTED rid is either result()-able or raises a loud
+        AdmissionError — never a silent loss (a KeyError would fail here);
+    (b) every produced result — retried, rerouted, or deadline-flushed —
+        is bit-identical to the fault-free eager path.
+    """
+    stages = _mm_stages()
+    plan = FaultPlan(seed=seed, p_launch_fail=p_fail,
+                     p_latency_spike=p_spike, latency_spike_s=spike_s,
+                     blackouts=(Blackout(LANE0, 1, blackout_len),))
+    t = [0.0]
+    srv = Server(stages, workers=(EGPU_16T, EGPU_16T), bucket_sizes=(8,),
+                 max_batch=2, max_pending=8, fault_plan=plan,
+                 breaker_threshold=2, breaker_cooldown=2,
+                 clock=lambda: t[0])
+    rng = np.random.default_rng(seed)
+    accepted = []
+    for i in range(10):
+        x = jnp.asarray(rng.standard_normal((8, 8)), jnp.float32)
+        t[0] += float(rng.random()) * 1e-3
+        try:
+            accepted.append((srv.submit(x, deadline=10.0, priority=i % 3), x))
+        except AdmissionError:
+            pass
+    srv.flush()
+    # one deadline-carrying straggler flushed by the deadline pump (its
+    # bucket never fills): must also come back bit-identical
+    x_f = jnp.asarray(rng.standard_normal((8, 8)), jnp.float32)
+    flushes_before = srv.batcher.deadline_flushes
+    rid_f = srv.submit(x_f, deadline=5.0)
+    t[0] += 5.0
+    srv.tick()
+    assert srv.batcher.deadline_flushes == flushes_before + 1
+    srv.flush()
+    accepted.append((rid_f, x_f))
+
+    n_ok = n_shed = 0
+    for rid, x in accepted:
+        try:
+            (got,) = srv.result(rid)     # KeyError here = silently lost
+        except AdmissionError as e:
+            assert "shed" in str(e)
+            n_shed += 1
+            continue
+        np.testing.assert_array_equal(np.asarray(got), _eager_ref(stages, x))
+        n_ok += 1
+    assert n_ok + n_shed == len(accepted)
+    rep = srv.report()
+    assert rep.n_requests == n_ok
+    assert rep.n_shed >= n_shed          # report counts door-sheds too
+    if plan.injected_failures:           # faults leave visible footprints
+        assert rep.n_retries + rep.n_dispatch_failures >= 1
+    return n_ok
+
+
+@pytest.mark.parametrize("seed,p_fail,p_spike,blackout_len", [
+    (env_seed(0), 0.0, 0.0, 0),          # fault-free control
+    (env_seed(1), 0.2, 0.3, 2),          # mixed faults
+    (env_seed(2), 0.6, 0.0, 4),          # failure-heavy
+    (env_seed(3), 0.0, 1.0, 0),          # spike-only
+])
+def test_no_request_silently_lost_seeded_sweep(seed, p_fail, p_spike,
+                                               blackout_len):
+    n_ok = _fault_scenario(seed, p_fail, p_spike, 0.05, blackout_len)
+    if p_fail == 0.0 and blackout_len == 0:
+        assert n_ok == 11                # fault-free: everything completes
+
+
+def test_no_request_silently_lost_property():
+    """Satellite (ISSUE 6): hypothesis sweep over random seeded FaultPlans
+    — same invariants as the seeded sweep, adversarial parameters."""
+    pytest.importorskip("hypothesis")    # not baked into every image
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+
+    @settings(max_examples=8, deadline=None)
+    @given(seed=st.integers(0, 2**31 - 1),
+           p_fail=st.floats(0.0, 0.8),
+           p_spike=st.floats(0.0, 1.0),
+           spike_s=st.floats(0.0, 0.5),
+           blackout_len=st.integers(0, 5))
+    def prop(seed, p_fail, p_spike, spike_s, blackout_len):
+        _fault_scenario(seed, p_fail, p_spike, spike_s, blackout_len)
+
+    prop()

@@ -295,3 +295,38 @@ def test_tinybio_sharded_bit_identical_subprocess():
     # the full TinyBio bucket (batch 2 over data=2) genuinely sharded
     assert result["shards"] == 2
     assert result["util"] == {"data": 1.0}
+
+
+# ---------------------------------------------------------------------------
+# Fault injection through a sharded lane (ISSUE 6)
+# ---------------------------------------------------------------------------
+def test_sharded_lane_blackout_reroutes_bit_identical():
+    """The fault gate fires inside ShardedWorker._do_launch too: a
+    blacked-out mesh lane reroutes its micro-batches to the plain sibling,
+    results stay bit-identical, and the lane serves again after the
+    window."""
+    from repro.serve import Blackout, FaultPlan, env_seed
+    stages = _mm_stages()
+    plan = FaultPlan(seed=env_seed(11),
+                     blackouts=(Blackout("mesh", start=0, length=2),))
+    mesh_lane = ShardedWorker(EGPU_16T, data_mesh(1), name="mesh",
+                              fault_plan=plan)
+    plain_lane = QueueWorker(EGPU_16T, name="plain", fault_plan=plan)
+    srv = Server(stages, workers=(mesh_lane, plain_lane), bucket_sizes=(8,),
+                 max_batch=2, breaker_threshold=2, breaker_cooldown=1)
+    xs = _requests(12)
+    rids = [srv.submit(x) for x in xs]
+    srv.flush()
+    rep = srv.report()
+    assert rep.n_shed == 0 and rep.n_dispatch_failures == 0
+    assert rep.n_retries >= 1
+    per = {q.name: q for q in rep.queues}
+    assert per["mesh"].launch_failures == 2
+    assert per["mesh"].batches >= 1          # recovered after the window
+    assert per["plain"].batches >= 1
+    ref = Server(stages, workers=(EGPU_16T,), bucket_sizes=(8,), max_batch=2)
+    rids_ref = [ref.submit(x) for x in xs]
+    ref.flush()
+    for rs, rr in zip(rids, rids_ref):
+        np.testing.assert_array_equal(np.asarray(srv.result(rs)[0]),
+                                      np.asarray(ref.result(rr)[0]))
