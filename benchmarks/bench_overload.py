@@ -17,7 +17,14 @@ Three arms over the SAME arrival trace and request payloads:
   the three lanes mid-run and sprinkles launch failures: the dispatcher
   reroutes/retries, the breaker quarantines the dead lane, and every
   accepted-and-served request must stay bit-identical to the fault-free
-  eager path.
+  eager path;
+* **shed+faults, traced** — the faulted arm re-run under a
+  :class:`repro.obs.Tracer` (ISSUE 7): every accepted rid must grow a
+  complete span tree ending in exactly one terminal (``result`` or a named
+  ``shed``), the Chrome-trace export must schema-validate, and — the
+  zero-perturbation gate — goodput, shed/violation/retry counts and every
+  served result must match the untraced faulted arm exactly.  ``--trace
+  PATH`` (or ``run(trace_path=...)``) writes the Perfetto-loadable JSON.
 
 All timing is *modeled* virtual time (an injected clock + each lane's
 ``modeled_busy_until`` machine-model timeline), so goodput — in-deadline
@@ -35,6 +42,7 @@ import numpy as np
 from repro.core import APU, EGPU_16T, Kernel, Stage
 from repro.kernels.gemm.ref import counts as gemm_counts
 from repro.kernels.gemm.ref import gemm_ref
+from repro.obs import Tracer, validate_chrome_trace
 from repro.serve import AdmissionError, Blackout, FaultPlan, Server, env_seed
 
 from .history import append_entry
@@ -92,13 +100,15 @@ def _profile_spr(stages):
     return spr
 
 
-def _run_arm(stages, xs, arrivals, budget, admission, fault_plan=None):
+def _run_arm(stages, xs, arrivals, budget, admission, fault_plan=None,
+             tracer=None):
     clk = VClock()
     srv = Server(stages, workers=(EGPU_16T,) * N_LANES,
                  bucket_sizes=(BUCKET,), max_batch=MAX_BATCH,
                  max_pending=MAX_PENDING, admission=admission,
                  deadline_flush=admission, fault_plan=fault_plan,
-                 breaker_threshold=2, breaker_cooldown=4, clock=clk)
+                 breaker_threshold=2, breaker_cooldown=4, clock=clk,
+                 tracer=tracer)
     accepted = []
     max_backlog = 0.0
     max_pending_depth = 0
@@ -117,7 +127,7 @@ def _run_arm(stages, xs, arrivals, budget, admission, fault_plan=None):
     return srv, accepted, max_backlog, max_pending_depth
 
 
-def run():
+def run(trace_path=None):
     print("=" * 76)
     print(f"Open-loop overload: Poisson arrivals at {OFFERED_X:.1f}x modeled "
           f"saturation, {N_LANES} lanes")
@@ -136,14 +146,25 @@ def run():
     print(f"  modeled {spr * 1e6:8.2f} us/request -> saturation "
           f"{sat_rate:,.0f} req/s, deadline budget {budget * 1e6:.1f} us")
 
-    fault_plan = FaultPlan(
-        seed=env_seed(42), p_launch_fail=0.05,
-        blackouts=(Blackout("0:e-gpu-16t", start=5, length=7),))
+    def _fault_plan():
+        # a fresh plan per arm (draws are pure functions of the seed, so
+        # the arms see identical faults; per-plan injection counters stay
+        # per-arm)
+        return FaultPlan(
+            seed=env_seed(42), p_launch_fail=0.05,
+            blackouts=(Blackout("0:e-gpu-16t", start=5, length=7),))
+
+    fault_plan = _fault_plan()
+    tracer = Tracer()
     arms = {
         "fifo": _run_arm(stages, xs, arrivals, budget, admission=False),
         "shed": _run_arm(stages, xs, arrivals, budget, admission=True),
         "shed_faulted": _run_arm(stages, xs, arrivals, budget,
                                  admission=True, fault_plan=fault_plan),
+        "shed_faulted_traced": _run_arm(stages, xs, arrivals, budget,
+                                        admission=True,
+                                        fault_plan=_fault_plan(),
+                                        tracer=tracer),
     }
 
     # bit-identity of every served request in the FAULTED arm (the one
@@ -166,6 +187,26 @@ def run():
     assert bit_identical, "faulted-arm results diverged from eager path"
     assert n_checked > 0
 
+    # ISSUE 7: the traced arm accounts for EVERY accepted request — one
+    # complete span tree per rid, ending in exactly one terminal — and its
+    # served results stay bit-identical to the eager refs
+    srv_t, accepted_t, _, _ = arms["shed_faulted_traced"]
+    assert tracer.request_rids() == sorted(rid for _, rid in accepted_t)
+    tree_errors = tracer.validate_request_trees()
+    assert not tree_errors, tree_errors
+    n_traced_served = 0
+    for i, rid in accepted_t:
+        try:
+            (got,) = srv_t.result(rid)
+        except AdmissionError:
+            continue
+        if i not in refs:
+            outs, _ = apu.offload(stages, (xs[i],), mode="eager")
+            refs[i] = np.asarray(outs[0].data)
+        assert np.array_equal(np.asarray(got), refs[i]), (
+            "traced-arm result diverged from eager path")
+        n_traced_served += 1
+
     goodput = {}
     rows = {}
     for name, (srv, accepted, max_backlog, max_depth) in arms.items():
@@ -182,6 +223,19 @@ def run():
               f"req/s modeled  {len(accepted):3d} accepted  "
               f"{rep.n_shed:3d} shed  {rep.n_deadline_violations:3d} late  "
               f"backlog <= {max_backlog * 1e6:8.1f} us")
+
+    # zero-perturbation gate: tracing must not move a single modeled number
+    assert goodput["shed_faulted_traced"] == goodput["shed_faulted"], (
+        "tracing perturbed modeled goodput")
+    assert rows["shed_faulted_traced"] == rows["shed_faulted"], (
+        "tracing perturbed the modeled serving outcome")
+
+    trace_doc = tracer.to_chrome_json(trace_path)
+    schema_errors = validate_chrome_trace(trace_doc)
+    assert not schema_errors, schema_errors
+    if trace_path is not None:
+        print(f"  traced arm: {len(tracer.spans)} spans over "
+              f"{len(tracer.request_rids())} request trees -> {trace_path}")
 
     fifo = max(goodput["fifo"], 1e-12)
     speedup = goodput["shed"] / fifo
@@ -217,6 +271,14 @@ def run():
         "arms": rows,
         "bit_identical_under_faults": bit_identical,
         "n_bit_identity_checked": n_checked,
+        "trace": {
+            "n_spans": len(tracer.spans),
+            "n_request_trees": len(tracer.request_rids()),
+            "n_traced_served": n_traced_served,
+            "request_trees_complete": not tree_errors,
+            "schema_valid": not schema_errors,
+            "path": None if trace_path is None else str(trace_path),
+        },
     }
     history = append_entry(OUT_PATH, result)
     print(f"  appended to {OUT_PATH.name} (run #{len(history)})")
@@ -224,4 +286,9 @@ def run():
 
 
 if __name__ == "__main__":
-    run()
+    import argparse
+
+    parser = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    parser.add_argument("--trace", metavar="PATH", default=None,
+                        help="write the traced arm's Chrome trace JSON here")
+    run(trace_path=parser.parse_args().trace)

@@ -9,6 +9,13 @@ on purpose, like ``bench_dispatch``) and reports the per-offload speedup —
 CI gates conservatively at >= 2x (dev hosts measure far higher; the slack
 absorbs shared-runner noise).
 
+A traced arm (ISSUE 7) replays the same pipeline through a small
+``Server(tracer=...)`` session on a virtual clock: every request must grow
+a complete span tree, the Chrome-trace export must schema-validate, the
+traced session's report must match an untraced twin exactly, and results
+stay bit-identical to the cached offload path.  ``--trace PATH`` writes
+the Perfetto-loadable JSON.
+
 Results are appended to ``BENCH_serve.json`` (timestamped list-of-runs, same
 trajectory format as ``BENCH_dispatch.json``).
 """
@@ -21,7 +28,8 @@ import numpy as np
 
 from repro.core import APU, EGPU_16T, Kernel, Stage
 from repro.kernels.gemm.ref import gemm_ref
-from repro.serve import GraphCache
+from repro.obs import Tracer, validate_chrome_trace
+from repro.serve import GraphCache, Server
 
 from .history import append_entry
 
@@ -55,7 +63,56 @@ def _bench_offload(apu, stages, x):
     return best / REPS
 
 
-def run():
+def _traced_session(stages, xs, tracer=None):
+    """A small serve session on a virtual clock (traced when asked)."""
+    t = [0.0]
+    srv = Server(stages, workers=(EGPU_16T,), bucket_sizes=(SIZE,),
+                 max_batch=2, clock=lambda: t[0], tracer=tracer)
+    rids = []
+    for i, x in enumerate(xs):
+        t[0] = 1e-4 * i
+        rids.append(srv.submit(x))
+    t[0] = 1e-4 * len(xs) + 1e-3
+    srv.flush()
+    return srv, rids
+
+
+def _traced_arm(stages, x, trace_path):
+    """ISSUE 7 observability gate on the serve path (see module docstring)."""
+    xs = [x] * 8
+    tracer = Tracer()
+    srv_t, rids_t = _traced_session(stages, xs, tracer=tracer)
+    srv_u, rids_u = _traced_session(stages, xs, tracer=None)
+    assert tracer.request_rids() == sorted(rids_t)
+    tree_errors = tracer.validate_request_trees()
+    assert not tree_errors, tree_errors
+    rep_t, rep_u = srv_t.report(), srv_u.report()
+    assert (rep_t.n_requests, rep_t.n_batches, rep_t.modeled_latency_s,
+            rep_t.goodput_per_s_modeled) == (
+        rep_u.n_requests, rep_u.n_batches, rep_u.modeled_latency_s,
+        rep_u.goodput_per_s_modeled), "tracing perturbed the modeled report"
+    ref, _ = APU(EGPU_16T).offload(stages, (x,))
+    ref = np.asarray(ref[0].data)
+    for rid_t, rid_u in zip(rids_t, rids_u):
+        (got_t,), (got_u,) = srv_t.result(rid_t), srv_u.result(rid_u)
+        assert np.array_equal(np.asarray(got_t), ref)
+        assert np.array_equal(np.asarray(got_u), ref)
+    doc = tracer.to_chrome_json(trace_path)
+    schema_errors = validate_chrome_trace(doc)
+    assert not schema_errors, schema_errors
+    print(f"  traced arm: {len(tracer.spans)} spans over "
+          f"{len(rids_t)} request trees, schema valid, report unperturbed"
+          + ("" if trace_path is None else f" -> {trace_path}"))
+    return {
+        "n_spans": len(tracer.spans),
+        "n_request_trees": len(rids_t),
+        "request_trees_complete": not tree_errors,
+        "schema_valid": not schema_errors,
+        "path": None if trace_path is None else str(trace_path),
+    }
+
+
+def run(trace_path=None):
     print("=" * 76)
     print("Serving path: cached CommandGraph vs per-offload re-capture")
     print(f"(chain of {CHAIN} dependent {SIZE}x{SIZE} GeMM stages, best of "
@@ -77,6 +134,8 @@ def run():
           f"(>= 2x CI gate)")
     assert cache.misses == 1, "steady-state offloads must never re-capture"
 
+    trace = _traced_arm(stages, x, trace_path)
+
     result = {
         "bench": "serve",
         "size": SIZE,
@@ -87,6 +146,7 @@ def run():
                            "cached": cached * 1e6},
         "cached_vs_recapture_speedup": ratio,
         "cache_stats": cache.stats(),
+        "trace": trace,
     }
     history = append_entry(OUT_PATH, result)
     print(f"  appended to {OUT_PATH.name} (run #{len(history)})")
@@ -94,4 +154,9 @@ def run():
 
 
 if __name__ == "__main__":
-    run()
+    import argparse
+
+    parser = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    parser.add_argument("--trace", metavar="PATH", default=None,
+                        help="write the traced arm's Chrome trace JSON here")
+    run(trace_path=parser.parse_args().trace)

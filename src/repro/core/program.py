@@ -4,8 +4,9 @@ The paper's Tiny-OpenCL (§IV) is a *real* (if tiny) OpenCL host API: the
 host builds a program, creates kernel objects from it, sets their arguments
 and enqueues them.  Until this module, our runtime reproduced the execution
 side (queues, events, graphs) but the host-facing surface was ad-hoc —
-seven per-family ``make_kernel()`` factory functions scattered across
-``repro.kernels.*.ops``.  This module is the clProgram/clKernel analogue:
+seven per-family factory functions scattered across
+``repro.kernels.*.ops`` (removed once the registry below became the only
+entry point).  This module is the clProgram/clKernel analogue:
 
 * every kernel family registers a **builder** through the
   :func:`kernel_family` decorator into one :class:`KernelRegistry`
@@ -44,7 +45,6 @@ OpenCL mapping::
 from __future__ import annotations
 
 import importlib
-import warnings
 from typing import Any, Callable, Dict, Hashable, Optional, Tuple
 
 from .device import EGPUConfig, EGPU_16T
@@ -234,20 +234,3 @@ class Program:
     def __repr__(self) -> str:
         return (f"Program(config={self.config.name!r}, "
                 f"families={len(self.registry)})")
-
-
-def deprecated_make_kernel(family: str, config: EGPUConfig,
-                           **variant: Any) -> Kernel:
-    """Shared body of the legacy per-family ``make_kernel`` shims.
-
-    Deprecation policy: ``make_kernel`` keeps working for at least two more
-    releases (it returns the *same* memoized kernel object the registry
-    hands out, so legacy and v2 call sites interoperate), but warns so
-    out-of-tree callers migrate to :meth:`Program.create_kernel`.
-    """
-    warnings.warn(
-        f"{family}.ops.make_kernel is deprecated; use "
-        f"Program.build(config).create_kernel({family!r}, ...) "
-        "(repro.core.program / repro.tinycl)",
-        DeprecationWarning, stacklevel=3)
-    return Program.build(config).create_kernel(family, **variant)

@@ -423,6 +423,14 @@ class Event:
 
     @property
     def wall_s(self) -> float:
+        """Alias of ``dispatch_s``.
+
+        Deliberately readable on a *released* event (unlike :meth:`wait`,
+        which raises): ``dispatch_s`` is O(1) cost metadata exactly like
+        ``modeled`` / ``energy_j``, and the released-event contract keeps
+        all three — release drops only the functional outputs.  Pinned by
+        ``test_released_event_metadata_survives_profiling_window``.
+        """
         return self.dispatch_s
 
     @property
@@ -534,7 +542,8 @@ class CommandQueue:
 
     def __init__(self, ctx: Context, profile: bool = True,
                  blocking: bool = False, max_events: Optional[int] = None,
-                 out_of_order: bool = False):
+                 out_of_order: bool = False, tracer: Optional[Any] = None,
+                 trace_track: Optional[str] = None):
         if max_events is not None and max_events < 0:
             raise ValueError("max_events must be None or >= 0")
         self.ctx = ctx
@@ -542,6 +551,14 @@ class CommandQueue:
         self.blocking = blocking
         self.max_events = max_events
         self.out_of_order = out_of_order
+        # Opt-in span tracing (ISSUE 7, repro.obs): every booked event
+        # becomes one span on this queue's track, laid out end-to-end on
+        # the queue's cumulative *modeled* timeline.  Strictly
+        # observational — guarded at each booking site, so an untraced
+        # queue (the default) allocates nothing from repro.obs.
+        self._tracer = tracer
+        self._trace_track = trace_track or f"queue:{ctx.device.config.name}"
+        self._trace_t = 0.0
         self._barrier: Optional[Event] = None   # latest eager barrier event
         self._events: List[Event] = []
         self._drained = 0              # finish() watermark: events before
@@ -583,6 +600,15 @@ class CommandQueue:
             return modeled, host_energy_j(modeled)
         modeled = egpu_time(cfg, counts, ndr)
         return modeled, egpu_energy_j(cfg, modeled)
+
+    def _trace_event(self, ev: "Event") -> None:
+        """Record one booked event as a span on this queue's modeled
+        timeline (only reached when a tracer is installed)."""
+        dur = ev.modeled.total_s if ev.modeled is not None else 0.0
+        self._tracer.span(ev.kernel.name, self._trace_t,
+                          self._trace_t + dur, track=self._trace_track,
+                          dispatch_s=ev.dispatch_s)
+        self._trace_t += dur
 
     def _model_transfer(self, nbytes: float
                         ) -> Tuple[Optional[PhaseBreakdown], Optional[float]]:
@@ -687,6 +713,8 @@ class CommandQueue:
             ev._done = True
             ev.deps = ()
         self._events.append(ev)
+        if self._tracer is not None:
+            self._trace_event(ev)
         return ev
 
     def enqueue_kernel(self, kernel: Kernel, ndr: Optional[NDRange] = None,
@@ -729,6 +757,8 @@ class CommandQueue:
         if self.blocking or blocking:
             ev.wait()
         self._events.append(ev)
+        if self._tracer is not None:
+            self._trace_event(ev)
         return ev
 
     @staticmethod
@@ -878,6 +908,8 @@ class CommandQueue:
                          if not e.released)
         ev = Event(_MARKER, (), None, None, 0.0, deps=deps)
         self._events.append(ev)
+        if self._tracer is not None:
+            self._trace_event(ev)
         if barrier:
             self._barrier = ev
         return ev
@@ -1526,6 +1558,8 @@ class CommandGraph:
                 ev = Event(node.kernel, node_outs, node.modeled,
                            node.energy_j, per_node)
                 target._events.append(ev)
+                if target._tracer is not None:
+                    target._trace_event(ev)
                 for b in node_outs:      # dataflow edge for later eager
                     b._event = ev        # consumers, same as enqueue
         return outs

@@ -7,7 +7,6 @@ import functools
 import jax
 
 from ...core.device import EGPU_16T, EGPUConfig
-from ...core.program import deprecated_make_kernel as _deprecated_make_kernel
 from ...core.program import kernel_family
 from ...core.runtime import Kernel
 from ..common import pad_dim
@@ -42,8 +41,3 @@ def build_kernel(config: EGPUConfig = EGPU_16T, *,
         counts=lambda n, itemsize=4: delineate_counts(n, itemsize),
         jitted=use_pallas,   # `delineate` is already jax.jit-wrapped
     )
-
-
-def make_kernel(config: EGPUConfig = EGPU_16T, use_pallas: bool = True) -> Kernel:
-    """Deprecated: use ``Program.build(config).create_kernel("delineate")``."""
-    return _deprecated_make_kernel("delineate", config, use_pallas=use_pallas)

@@ -8,7 +8,6 @@ import jax
 import jax.numpy as jnp
 
 from ...core.device import EGPU_16T, EGPUConfig
-from ...core.program import deprecated_make_kernel as _deprecated_make_kernel
 from ...core.program import kernel_family
 from ...core.runtime import Kernel
 from ..common import pad_dim, round_up
@@ -41,8 +40,3 @@ def build_kernel(config: EGPUConfig = EGPU_16T, *,
         counts=lambda n, taps, itemsize=4: fir_counts(n, taps, itemsize),
         jitted=use_pallas,   # `fir` is already jax.jit-wrapped
     )
-
-
-def make_kernel(config: EGPUConfig = EGPU_16T, use_pallas: bool = True) -> Kernel:
-    """Deprecated: use ``Program.build(config).create_kernel("fir")``."""
-    return _deprecated_make_kernel("fir", config, use_pallas=use_pallas)

@@ -8,7 +8,6 @@ import functools
 import jax
 
 from ...core.device import EGPU_16T, EGPUConfig, KernelKnobs
-from ...core.program import deprecated_make_kernel as _deprecated_make_kernel
 from ...core.program import kernel_family
 from ...core.runtime import Kernel
 from ..common import pad_dim, round_up
@@ -43,8 +42,3 @@ def build_kernel(config: EGPUConfig = EGPU_16T, *,
         counts=lambda m, n, k, itemsize=4: gemm_counts(m, n, k, itemsize),
         jitted=use_pallas,   # `gemm` is already jax.jit-wrapped
     )
-
-
-def make_kernel(config: EGPUConfig = EGPU_16T, use_pallas: bool = True) -> Kernel:
-    """Deprecated: use ``Program.build(config).create_kernel("gemm")``."""
-    return _deprecated_make_kernel("gemm", config, use_pallas=use_pallas)

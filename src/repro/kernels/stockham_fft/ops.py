@@ -6,7 +6,6 @@ import jax
 import jax.numpy as jnp
 
 from ...core.device import EGPU_16T, EGPUConfig
-from ...core.program import deprecated_make_kernel as _deprecated_make_kernel
 from ...core.program import kernel_family
 from ...core.runtime import Kernel
 from .ref import counts as fft_counts, stockham_fft_ref
@@ -44,9 +43,3 @@ def build_kernel(config: EGPUConfig = EGPU_16T, *,
         counts=lambda n, itemsize=4: fft_counts(n, itemsize),
         jitted=use_pallas,   # `fft` is already jax.jit-wrapped
     )
-
-
-def make_kernel(config: EGPUConfig = EGPU_16T, use_pallas: bool = True) -> Kernel:
-    """Deprecated: use ``Program.build(config).create_kernel("stockham_fft")``."""
-    return _deprecated_make_kernel("stockham_fft", config,
-                                   use_pallas=use_pallas)

@@ -7,7 +7,6 @@ import functools
 import jax
 
 from ...core.device import EGPU_16T, EGPUConfig
-from ...core.program import deprecated_make_kernel as _deprecated_make_kernel
 from ...core.program import kernel_family
 from ...core.runtime import Kernel
 from ..common import pad_dim
@@ -39,8 +38,3 @@ def build_kernel(config: EGPUConfig = EGPU_16T, *,
         counts=lambda q, m, d, itemsize=4, rbf=True: svm_counts(q, m, d, itemsize, rbf),
         jitted=use_pallas,   # `svm_decision` is already jax.jit-wrapped
     )
-
-
-def make_kernel(config: EGPUConfig = EGPU_16T, use_pallas: bool = True) -> Kernel:
-    """Deprecated: use ``Program.build(config).create_kernel("svm")``."""
-    return _deprecated_make_kernel("svm", config, use_pallas=use_pallas)

@@ -27,7 +27,14 @@ engine:
   :class:`Blackout`\\ s) injected at the worker launch gate, retried by the
   dispatcher onto other lanes with capped backoff, repeat offenders
   quarantined behind :class:`CircuitBreaker`\\ s with half-open probes —
-  retried batches stay bit-identical to the fault-free path.
+  retried batches stay bit-identical to the fault-free path;
+* observability (ISSUE 7) — built with ``Server(tracer=...)`` the whole
+  request lifecycle lands in per-rid span trees on the modeled virtual
+  clock (see :mod:`repro.obs`), ``Server.publish_metrics`` dumps the
+  stack's telemetry into a :class:`~repro.obs.MetricsRegistry`, and
+  :attr:`ServeReport.latency_decomposition_s` carries the p50/p99 flame
+  attribution over :data:`DECOMP_PHASES`.  All opt-in: an untraced server
+  allocates nothing from ``repro.obs`` on its hot dispatch path.
 """
 
 from .batching import (BucketBatcher, MicroBatch, ServeRequest,
@@ -38,7 +45,8 @@ from .dispatch import (CircuitBreaker, DispatchError, LaunchTicket,
                        MultiQueueDispatcher, QueueStats, QueueWorker)
 from .faults import (Blackout, FaultDecision, FaultPlan, InjectedFault,
                      apply_spike, env_seed)
-from .server import PERCENTILES, AdmissionError, Server, ServeReport
+from .server import (DECOMP_PERCENTILES, DECOMP_PHASES, PERCENTILES,
+                     AdmissionError, Server, ServeReport)
 from .sharded import (BATCH_AXIS, ShardedWorker, data_mesh, mesh_signature,
                       shard_breakdown)
 
@@ -49,7 +57,8 @@ __all__ = [
     "QueueStats", "QueueWorker",
     "Blackout", "FaultDecision", "FaultPlan", "InjectedFault", "apply_spike",
     "env_seed",
-    "PERCENTILES", "AdmissionError", "Server", "ServeReport",
+    "DECOMP_PERCENTILES", "DECOMP_PHASES", "PERCENTILES",
+    "AdmissionError", "Server", "ServeReport",
     "BATCH_AXIS", "ShardedWorker", "data_mesh", "mesh_signature",
     "shard_breakdown",
 ]

@@ -258,6 +258,19 @@ class GraphCache:
                 "evictions": self.evictions, "entries": len(self._graphs),
                 "capacity": self.capacity}
 
+    def publish_metrics(self, registry) -> None:
+        """Publish the cache counters into a
+        :class:`~repro.obs.MetricsRegistry` (snapshot style, idempotent)."""
+        c = registry.counter("repro_graph_cache_events_total",
+                             "graph cache hits/misses/evictions")
+        c.set_total(self.hits, kind="hits")
+        c.set_total(self.misses, kind="misses")
+        c.set_total(self.evictions, kind="evictions")
+        registry.gauge("repro_graph_cache_entries",
+                       "resident compiled graphs").set(len(self._graphs))
+        registry.gauge("repro_graph_cache_capacity",
+                       "configured cache capacity").set(self.capacity)
+
     def clear(self) -> None:
         self._graphs.clear()
         self._sig_memo.clear()

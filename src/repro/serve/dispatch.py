@@ -51,6 +51,7 @@ from ..core.apu import APU
 from ..core.device import EGPUConfig
 from ..core.machine import PhaseBreakdown
 from ..core.runtime import Buffer, CommandGraph
+from ..obs import Tracer
 from .batching import MicroBatch
 from .faults import FaultPlan, InjectedFault, apply_spike
 
@@ -114,7 +115,8 @@ class QueueWorker:
     def __init__(self, config: EGPUConfig, name: Optional[str] = None,
                  max_in_flight: int = 2, explicit_transfers: bool = True,
                  fault_plan: Optional[FaultPlan] = None,
-                 clock: Callable[[], float] = time.perf_counter):
+                 clock: Callable[[], float] = time.perf_counter,
+                 tracer: Optional[Tracer] = None):
         if max_in_flight < 1:
             raise ValueError("max_in_flight must be >= 1")
         # Host API v2 (default): the worker's captures move each
@@ -130,6 +132,10 @@ class QueueWorker:
         self.max_in_flight = max_in_flight
         self.fault_plan = fault_plan
         self.clock = clock
+        #: opt-in span tracer (ISSUE 7): every hook guards on ``is not
+        #: None`` so an untraced worker allocates no obs object on the
+        #: hot dispatch path
+        self.tracer = tracer
         self._inflight: List[LaunchTicket] = []
         self._launch_seq = 0             # fault-plan launch index (attempts)
         #: machine-model time this lane is busy until (server clock
@@ -226,7 +232,45 @@ class QueueWorker:
         if fused is not None:
             self.modeled_s += fused.total_s
         self.energy_j += energy
+        if self.tracer is not None:
+            self._trace_launch(graph, batch, start, t_done_modeled, fused)
         return ticket, retired
+
+    def _trace_launch(self, graph: CommandGraph, batch: MicroBatch,
+                      start: float, t_done: float,
+                      fused: Optional[PhaseBreakdown]) -> None:
+        """Lane-track slices for one launch (only reached when a tracer is
+        installed): a ``launch`` span over the modeled service window, one
+        ``startup+scheduling`` slice for the per-chain Tiny-OpenCL
+        overhead, then one slice per graph node sized by its captured
+        :class:`PhaseBreakdown` and laid out along the node DAG's
+        critical-path schedule — concurrent branches visibly overlap.
+        Purely observational: reads the already-computed modeled schedule,
+        never feeds back into it."""
+        tr = self.tracer
+        track = f"lane:{self.name}"
+        parent = tr.span("launch", start, t_done, track=track,
+                         n_requests=batch.n_requests,
+                         rids=[r.rid for r in batch.requests])
+        if fused is None:
+            return
+        overhead_s = (fused.startup + fused.scheduling) / fused.freq_hz
+        if overhead_s > 0.0:
+            tr.span("startup+scheduling", start, start + overhead_s,
+                    track=track, parent=parent)
+        base = start + overhead_s
+        finish: dict = {}
+        for i, node in enumerate(graph.nodes):
+            t0 = max((finish[d] for d in node.deps if d in finish),
+                     default=base)
+            b = node.modeled
+            dur = (0.0 if b is None
+                   else (b.transfer + b.compute) / b.freq_hz)
+            finish[i] = t0 + dur
+            if node.kind == "sync" or b is None:
+                continue                 # zero-cost markers: no slice
+            tr.span(node.kernel.name, t0, t0 + dur, track=track,
+                    parent=parent, kind=node.kind)
 
     def _retire_oldest(self) -> LaunchTicket:
         ticket = self._inflight.pop(0)
@@ -247,6 +291,11 @@ class QueueWorker:
             self.queue.drain(ticket.n_events)
             self.queue.release_events(upto=ticket.n_events)
             ticket.t_done = self.clock()
+            if self.tracer is not None:
+                self.tracer.instant(
+                    f"lane:{self.name}", ticket.t_done, "retire",
+                    n_requests=ticket.batch.n_requests,
+                    n_events=ticket.n_events)
         return ticket
 
     def drain(self) -> List[LaunchTicket]:
@@ -300,6 +349,36 @@ class QueueStats:
     breaker_state: str = "closed"
     #: times this lane's breaker tripped OPEN (quarantines)
     breaker_trips: int = 0
+
+    def publish_metrics(self, registry) -> None:
+        """Publish this lane's totals into a
+        :class:`~repro.obs.MetricsRegistry` under ``lane=<name>`` labels
+        (snapshot style, idempotent — see :mod:`repro.obs.metrics`)."""
+        labels = dict(lane=self.name, config=self.config)
+        c = registry.counter
+        c("repro_lane_batches_total",
+          "micro-batches launched per lane").set_total(self.batches, **labels)
+        c("repro_lane_requests_total",
+          "requests served per lane").set_total(self.requests, **labels)
+        c("repro_lane_launch_failures_total",
+          "injected faults absorbed per lane").set_total(
+            self.launch_failures, **labels)
+        c("repro_lane_breaker_trips_total",
+          "circuit-breaker trips per lane").set_total(
+            self.breaker_trips, **labels)
+        c("repro_lane_backpressure_stalls_total",
+          "launches that first retired a ticket").set_total(
+            self.backpressure_stalls, **labels)
+        g = registry.gauge
+        g("repro_lane_modeled_seconds",
+          "modeled seconds served per lane").set(self.modeled_s, **labels)
+        g("repro_lane_energy_joules",
+          "modeled energy per lane").set(self.energy_j, **labels)
+        g("repro_lane_peak_in_flight",
+          "peak in-flight depth per lane").set(self.peak_in_flight, **labels)
+        g("repro_lane_breaker_open",
+          "1 when the lane's breaker is OPEN").set(
+            1.0 if self.breaker_state == "open" else 0.0, **labels)
 
 
 class CircuitBreaker:
@@ -385,7 +464,8 @@ class MultiQueueDispatcher:
                  failure_threshold: int = 3, breaker_cooldown: int = 8,
                  max_attempts: Optional[int] = None,
                  backoff_base_s: float = 0.001,
-                 backoff_cap_s: float = 0.05):
+                 backoff_cap_s: float = 0.05,
+                 tracer: Optional[Tracer] = None):
         if not workers:
             raise ValueError("need at least one QueueWorker")
         names = [w.name for w in workers]
@@ -400,6 +480,8 @@ class MultiQueueDispatcher:
         self.max_attempts = max_attempts
         self.backoff_base_s = backoff_base_s
         self.backoff_cap_s = backoff_cap_s
+        #: opt-in span tracer (ISSUE 7); guarded at every hook
+        self.tracer = tracer
         self._tick = 0                   # dispatch calls (breaker clock)
         self.retries = 0                 # failed attempts that were rerouted
         self.dispatch_failures = 0       # batches that exhausted every retry
@@ -460,21 +542,52 @@ class MultiQueueDispatcher:
             worker = self.pick(exclude=tried)
             breaker = self.breakers[worker.name]
             breaker.on_attempt()
+            if self.tracer is not None:
+                t_evt = t_now if t_now is not None else worker.clock()
+                for req in batch.requests:
+                    self.tracer.request_event(
+                        req.rid, t_evt, "dispatch-pick", lane=worker.name,
+                        attempt=attempt)
             try:
                 ticket, retired = worker.launch(graph_for(worker), batch,
                                                 t_now=t_now)
             except InjectedFault as e:
                 retired_all.extend(e.retired)
+                trips_before = breaker.trips
                 breaker.record_failure(self._tick)
                 tried.add(worker.name)
                 if len(tried) >= len(self.workers):
                     tried.clear()        # second pass over the fleet
                 last = e
-                if attempt + 1 < cap:
+                will_retry = attempt + 1 < cap
+                if self.tracer is not None:
+                    t_evt = t_now if t_now is not None else worker.clock()
+                    if breaker.trips > trips_before:
+                        self.tracer.instant(f"lane:{worker.name}", t_evt,
+                                            "breaker-trip",
+                                            cooldown=breaker.cooldown)
+                    for req in batch.requests:
+                        self.tracer.request_event(
+                            req.rid, t_evt, "fault", lane=worker.name,
+                            launch_idx=e.launch_idx, reason=e.reason)
+                        if breaker.trips > trips_before:
+                            self.tracer.request_event(
+                                req.rid, t_evt, "breaker-trip",
+                                lane=worker.name)
+                        if will_retry:
+                            self.tracer.request_event(
+                                req.rid, t_evt, "retry", attempt=attempt)
+                if will_retry:
                     self.retries += 1
                     if self.backoff_base_s > 0.0:
-                        time.sleep(min(self.backoff_cap_s,
-                                       self.backoff_base_s * (2 ** attempt)))
+                        backoff_s = min(self.backoff_cap_s,
+                                        self.backoff_base_s * (2 ** attempt))
+                        if self.tracer is not None:
+                            for req in batch.requests:
+                                self.tracer.request_event(
+                                    req.rid, t_evt, "backoff",
+                                    backoff_s=backoff_s)
+                        time.sleep(backoff_s)
                 continue
             breaker.record_success()
             retired_all.extend(retired)

@@ -125,6 +125,15 @@ class FaultPlan:
         self.injected_failures = 0
         self.injected_spikes = 0
 
+    def publish_metrics(self, registry) -> None:
+        """Publish the plan's injection totals into a
+        :class:`~repro.obs.MetricsRegistry` (snapshot style, idempotent)."""
+        c = registry.counter("repro_fault_injections_total",
+                             "faults injected by the active FaultPlan")
+        c.set_total(self.injected_failures, kind="failure",
+                    seed=str(self.seed))
+        c.set_total(self.injected_spikes, kind="spike", seed=str(self.seed))
+
     def draw(self, lane: str, launch_idx: int) -> FaultDecision:
         """The (deterministic) fate of launch ``launch_idx`` on ``lane``."""
         for b in self.blackouts:

@@ -55,6 +55,7 @@ import numpy as np
 
 from ..core.apu import Stage
 from ..core.device import EGPUConfig, EGPU_16T
+from ..obs import MetricsRegistry, Tracer
 from .batching import BucketBatcher, MicroBatch, batched_stages
 from .cache import GraphCache, stages_signature
 from .dispatch import (DispatchError, LaunchTicket, MultiQueueDispatcher,
@@ -62,6 +63,16 @@ from .dispatch import (DispatchError, LaunchTicket, MultiQueueDispatcher,
 from .faults import FaultPlan
 
 PERCENTILES = (50, 90, 99)
+
+#: per-request latency decomposition phases (ISSUE 7 flame attribution):
+#: ``admission`` (the modeled admission decision — instantaneous today,
+#: the column keeps the decomposition summing to end-to-end latency),
+#: ``queueing`` (bucket wait: submit -> launch), ``dispatch`` (lane
+#: backlog wait + the per-chain Tiny-OpenCL startup+scheduling overhead —
+#: the paper's §VII overhead split), ``compute`` and ``transfer`` (the
+#: fused chain's kernel and host<->D$ phases)
+DECOMP_PHASES = ("admission", "queueing", "dispatch", "compute", "transfer")
+DECOMP_PERCENTILES = (50, 99)
 
 
 class AdmissionError(RuntimeError):
@@ -120,6 +131,72 @@ class ServeReport:
     n_dispatch_failures: int = 0
     #: circuit-breaker trips across the fleet (lane quarantines)
     n_quarantines: int = 0
+    #: per-request flame attribution (ISSUE 7): phase -> {percentile ->
+    #: seconds}, decomposing modeled end-to-end latency into
+    #: admission/queueing/dispatch/compute/transfer (see
+    #: :data:`DECOMP_PHASES`); empty before any profiled completion
+    latency_decomposition_s: Dict[str, Dict[int, float]] = \
+        dataclasses.field(default_factory=dict)
+
+    def publish_metrics(self, registry: MetricsRegistry) -> MetricsRegistry:
+        """Publish this report (and its per-queue / cache roll-ups) into a
+        :class:`~repro.obs.MetricsRegistry` — snapshot style, idempotent.
+        """
+        c = registry.counter
+        g = registry.gauge
+        c("repro_serve_requests_total",
+          "completed requests").set_total(self.n_requests)
+        c("repro_serve_batches_total",
+          "launched micro-batches").set_total(self.n_batches)
+        c("repro_serve_shed_total",
+          "requests shed (door rejects + preemptions + dispatch "
+          "exhaustion)").set_total(self.n_shed)
+        c("repro_serve_deadline_violations_total",
+          "completions past their deadline").set_total(
+            self.n_deadline_violations)
+        c("repro_serve_deadline_flushes_total",
+          "partial buckets launched for a deadline").set_total(
+            self.deadline_flushes)
+        c("repro_serve_retries_total",
+          "failed launch attempts rerouted").set_total(self.n_retries)
+        c("repro_serve_dispatch_failures_total",
+          "micro-batches that exhausted every retry").set_total(
+            self.n_dispatch_failures)
+        c("repro_serve_quarantines_total",
+          "circuit-breaker trips").set_total(self.n_quarantines)
+        c("repro_serve_results_evicted_total",
+          "unread results evicted by the bounded store").set_total(
+            self.results_evicted)
+        g("repro_serve_requests_per_second",
+          "measured request throughput").set(self.requests_per_s)
+        g("repro_serve_goodput_per_second_modeled",
+          "in-deadline completions per modeled second").set(
+            self.goodput_per_s_modeled)
+        g("repro_serve_batch_fill_ratio",
+          "live requests / batch capacity").set(self.avg_batch_fill)
+        g("repro_serve_energy_per_request_joules",
+          "modeled energy per request").set(
+            self.modeled_energy_per_request_j)
+        lat = g("repro_serve_modeled_latency_seconds",
+                "modeled request latency percentiles")
+        for p, v in self.modeled_latency_s.items():
+            lat.set(v, quantile=f"p{p}")
+        flame = g("repro_serve_latency_phase_seconds",
+                  "per-request flame attribution (modeled)")
+        for phase, pcts in self.latency_decomposition_s.items():
+            for p, v in pcts.items():
+                flame.set(v, phase=phase, quantile=f"p{p}")
+        # same series GraphCache.publish_metrics writes — set_total is
+        # idempotent, so publishing a report over a live cache never skews
+        cache = registry.counter("repro_graph_cache_events_total",
+                                 "graph cache hits/misses/evictions")
+        for kind in ("hits", "misses", "evictions"):
+            cache.set_total(self.cache[kind], kind=kind)
+        g("repro_graph_cache_entries",
+          "resident compiled graphs").set(self.cache["entries"])
+        for qs in self.queues:
+            qs.publish_metrics(registry)
+        return registry
 
     def summary(self) -> str:
         lines = [
@@ -139,6 +216,12 @@ class ServeReport:
             f"{self.cache['evictions']} evictions "
             f"({self.cache['entries']}/{self.cache['capacity']} resident)",
         ]
+        for p in sorted({p for pcts in self.latency_decomposition_s.values()
+                         for p in pcts}):
+            lines.append(f"flame p{p:<2d}      " + "  ".join(
+                f"{phase} {self.latency_decomposition_s[phase][p] * 1e3:.3f}"
+                for phase in DECOMP_PHASES
+                if phase in self.latency_decomposition_s) + " ms")
         if (self.n_shed or self.n_deadline_violations
                 or self.deadline_flushes):
             lines.append(
@@ -218,12 +301,17 @@ class Server:
                  admission: bool = True, deadline_flush: bool = True,
                  fault_plan: Optional[FaultPlan] = None,
                  breaker_threshold: int = 3, breaker_cooldown: int = 8,
-                 clock: Callable[[], float] = time.perf_counter):
+                 clock: Callable[[], float] = time.perf_counter,
+                 tracer: Optional[Tracer] = None):
         self.stages = tuple(stages)
         self.clock = clock
         self.max_pending = max_pending
         self.admission = admission
         self.deadline_flush = deadline_flush
+        #: opt-in span tracer (ISSUE 7), installed on the dispatcher and
+        #: every lane; ``None`` (the default) keeps the hot dispatch path
+        #: free of any obs allocation — every hook guards on it
+        self.tracer = tracer
         self.batcher = BucketBatcher(bucket_sizes, max_batch=max_batch,
                                      fill=fill, crop_outputs=crop_outputs)
         lanes = []
@@ -233,14 +321,16 @@ class Server:
                     w.fault_plan = fault_plan
                 if clock is not time.perf_counter:
                     w.clock = clock
+                if tracer is not None and w.tracer is None:
+                    w.tracer = tracer
                 lanes.append(w)
             else:
                 lanes.append(QueueWorker(
                     w, name=f"{i}:{w.name}", max_in_flight=max_in_flight,
-                    fault_plan=fault_plan, clock=clock))
+                    fault_plan=fault_plan, clock=clock, tracer=tracer))
         self.dispatcher = MultiQueueDispatcher(
             lanes, failure_threshold=breaker_threshold,
-            breaker_cooldown=breaker_cooldown)
+            breaker_cooldown=breaker_cooldown, tracer=tracer)
         self.cache = GraphCache(cache_capacity)
         # Every micro-batch is padded to max_batch, so ONE batched pipeline
         # covers all traffic; its (const-hashing) signature is computed once
@@ -272,6 +362,12 @@ class Server:
         self._n_done = 0
         self._n_in_deadline = 0
         self._n_deadline_violations = 0
+        # Per-request flame attribution (ISSUE 7): modeled end-to-end
+        # latency split into DECOMP_PHASES, windowed like the other
+        # metrics.  Computed from timestamps the serve path already
+        # carries (no tracer required).
+        self._decomp: Dict[str, Deque[float]] = {
+            phase: deque(maxlen=metrics_window) for phase in DECOMP_PHASES}
         self._t0: Optional[float] = None
         self._t_last: Optional[float] = None
         self._t_last_modeled: Optional[float] = None
@@ -324,11 +420,25 @@ class Server:
                 raise ValueError(
                     f"deadline must be a positive budget in seconds, "
                     f"got {deadline}")
-        self._admit(now, deadline, priority)
+        try:
+            self._admit(now, deadline, priority)
+        except AdmissionError as e:
+            # door rejects never consumed a rid, so they carry no span
+            # tree — the shed decision lands as a track-level instant
+            if self.tracer is not None:
+                self.tracer.instant("server", now, "shed-at-door",
+                                    reason=str(e), priority=priority)
+            raise
         req = self.batcher.submit(
             *arrays, t_submit=now,
             deadline_s=None if deadline is None else now + deadline,
             priority=priority)
+        if self.tracer is not None:
+            self.tracer.begin_request(
+                req.rid, now, priority=priority,
+                deadline_s=None if deadline is None else now + deadline)
+            self.tracer.request_event(req.rid, now, "submit",
+                                      n_pending=self.batcher.n_pending)
         # Start the wall clock only once a request is actually ACCEPTED
         # (regression, ISSUE 6): stamping before batcher.submit charged
         # servers whose first submit was rejected (oversize, shed) for
@@ -337,7 +447,8 @@ class Server:
             self._t0 = now
         self._launch(self.batcher.pop_full())
         if self.deadline_flush:
-            self._launch(self.batcher.tick(now, slack_s=self._flush_slack()))
+            self._launch(self.batcher.tick(now, slack_s=self._flush_slack()),
+                         deadline_flushed=True)
         return req.rid
 
     def tick(self, now: Optional[float] = None) -> None:
@@ -347,7 +458,8 @@ class Server:
         if not self.deadline_flush:
             return
         now = self.clock() if now is None else now
-        self._launch(self.batcher.tick(now, slack_s=self._flush_slack()))
+        self._launch(self.batcher.tick(now, slack_s=self._flush_slack()),
+                     deadline_flushed=True)
 
     def flush(self) -> None:
         """Force every pending request through: drain partial buckets, then
@@ -430,6 +542,10 @@ class Server:
     def _record_shed(self, rid: int, reason: str) -> None:
         self._shed[rid] = reason
         self.n_shed += 1
+        if self.tracer is not None:
+            # accepted-then-shed: the rid's tree ends in a named terminal
+            self.tracer.finish_request(rid, self.clock(), "shed",
+                                       reason=reason)
         while len(self._shed) > self._results_window:
             self._shed.popitem(last=False)
 
@@ -470,12 +586,28 @@ class Server:
         return self._n_done
 
     # -- internals ----------------------------------------------------------
-    def _launch(self, batches: Sequence[MicroBatch]) -> None:
+    def _launch(self, batches: Sequence[MicroBatch],
+                deadline_flushed: bool = False) -> None:
         for batch in batches:
-            def graph_for(worker: QueueWorker):
-                graph, _hit = self.cache.get_or_capture(
+            if self.tracer is not None and deadline_flushed:
+                t_evt = self.clock()
+                for req in batch.requests:
+                    self.tracer.request_event(
+                        req.rid, t_evt, "deadline-flush",
+                        n_requests=batch.n_requests)
+
+            def graph_for(worker: QueueWorker,
+                          batch: MicroBatch = batch):
+                graph, hit = self.cache.get_or_capture(
                     worker.apu, self._bstages, batch.inputs,
                     key_prefix=self._bsig)
+                if self.tracer is not None:
+                    t_evt = self.clock()
+                    for req in batch.requests:
+                        self.tracer.request_event(
+                            req.rid, t_evt,
+                            "cache-hit" if hit else "cache-miss",
+                            lane=worker.name)
                 return graph
             try:
                 _ticket, retired = self.dispatcher.dispatch(
@@ -491,10 +623,38 @@ class Server:
                 continue
             self._finalize(retired)
 
+    def _trace_completion(self, t: LaunchTicket, req: Any,
+                          exec_start: float, violated: bool) -> None:
+        """Retroactive request-tree spans for one completed request (only
+        reached when a tracer is installed).  All timestamps are already
+        known — bucket wait, lane schedule, modeled completion — so the
+        spans are emitted at finalize time with zero hot-path cost."""
+        tr = self.tracer
+        rid = req.rid
+        t_end = (t.t_done_modeled if t.t_done_modeled is not None
+                 else exec_start)
+        tr.child(rid, "bucket-wait", req.t_submit, t.t_launch)
+        tr.child(rid, "dispatch", t.t_launch, exec_start,
+                 lane=t.worker.name)
+        tr.child(rid, "execute", exec_start, t_end, lane=t.worker.name,
+                 batch_requests=t.batch.n_requests)
+        if violated:
+            tr.request_event(rid, t_end, "deadline-miss",
+                             deadline_s=req.deadline_s)
+        tr.finish_request(rid, t_end, "result")
+
     def _finalize(self, tickets: Sequence[LaunchTicket]) -> None:
         for t in tickets:
             per_request = t.batch.crop(t.outputs)
             n = max(1, t.batch.n_requests)
+            # modeled start of the batch's service window on its lane
+            # (t_done_modeled already includes any queueing behind the
+            # lane's busy timeline)
+            fused_s = t.fused.total_s if t.fused is not None else 0.0
+            # clamped: an idle lane starts at t_launch exactly, and the
+            # subtraction may land an ulp before it
+            exec_start = (max(t.t_launch, t.t_done_modeled - fused_s)
+                          if t.t_done_modeled is not None else t.t_launch)
             for req, outs in zip(t.batch.requests, per_request):
                 self._results[req.rid] = outs
                 while len(self._results) > self._results_window:
@@ -508,16 +668,31 @@ class Server:
                     self._modeled_latency.append(t.fused.total_s)
                     self._modeled_cost.append(t.fused.scaled(1.0 / n).total_s)
                     self._modeled_energy.append(t.energy_j / n)
+                    # flame attribution: the request's end-to-end modeled
+                    # latency (submit -> t_done_modeled) split by phase —
+                    # the five deques always sum to it (see DECOMP_PHASES)
+                    freq = t.fused.freq_hz
+                    self._decomp["admission"].append(0.0)
+                    self._decomp["queueing"].append(
+                        t.t_launch - req.t_submit)
+                    self._decomp["dispatch"].append(
+                        (exec_start - t.t_launch)
+                        + (t.fused.startup + t.fused.scheduling) / freq)
+                    self._decomp["compute"].append(t.fused.compute / freq)
+                    self._decomp["transfer"].append(t.fused.transfer / freq)
                 # deadline accounting against the deterministic modeled
                 # completion time (requests without a deadline are always
                 # "in deadline" for goodput purposes)
-                if (req.deadline_s is not None
-                        and t.t_done_modeled is not None
-                        and t.t_done_modeled > req.deadline_s):
+                violated = (req.deadline_s is not None
+                            and t.t_done_modeled is not None
+                            and t.t_done_modeled > req.deadline_s)
+                if violated:
                     self._n_deadline_violations += 1
                 else:
                     self._n_in_deadline += 1
                 self._n_done += 1
+                if self.tracer is not None:
+                    self._trace_completion(t, req, exec_start, violated)
             if t.t_done is not None:
                 self._t_last = (t.t_done if self._t_last is None
                                 else max(self._t_last, t.t_done))
@@ -553,6 +728,13 @@ class Server:
                 axis_n[axis] = axis_n.get(axis, 0) + qs.batches
         mesh_util = {a: axis_sum[a] / axis_n[a]
                      for a in axis_sum if axis_n[a]}
+        decomp = {}
+        if any(self._decomp[p] for p in DECOMP_PHASES):
+            decomp = {
+                phase: {p: float(np.percentile(
+                            np.asarray(self._decomp[phase], np.float64), p))
+                        for p in DECOMP_PERCENTILES}
+                for phase in DECOMP_PHASES}
         return ServeReport(
             n_requests=self._n_done,
             n_batches=n_batches,
@@ -576,4 +758,21 @@ class Server:
             n_retries=self.dispatcher.retries,
             n_dispatch_failures=self.dispatcher.dispatch_failures,
             n_quarantines=self.dispatcher.quarantines(),
+            latency_decomposition_s=decomp,
         )
+
+    def publish_metrics(self, registry: Optional[MetricsRegistry] = None
+                        ) -> MetricsRegistry:
+        """Publish the whole stack's telemetry into a registry (snapshot
+        style, idempotent): the :meth:`report` roll-up, per-queue stats,
+        cache counters, and any installed fault plans' injection totals.
+        """
+        registry = MetricsRegistry() if registry is None else registry
+        self.report().publish_metrics(registry)
+        self.cache.publish_metrics(registry)
+        plans = {id(w.fault_plan): w.fault_plan
+                 for w in self.dispatcher.workers
+                 if w.fault_plan is not None}
+        for plan in plans.values():
+            plan.publish_metrics(registry)
+        return registry

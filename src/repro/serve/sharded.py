@@ -56,6 +56,7 @@ from ..core.device import EGPUConfig
 from ..core.machine import PhaseBreakdown
 from ..core.runtime import Buffer, CommandGraph
 from ..distributed.sharding import ShardingRules, SERVE_RULES, spec_for
+from ..obs import Tracer
 from .batching import MicroBatch
 from .dispatch import QueueStats, QueueWorker
 from .faults import FaultPlan, apply_spike
@@ -118,7 +119,8 @@ class ShardedWorker(QueueWorker):
                  const_axes: Optional[Sequence[Optional[Sequence[
                      Optional[str]]]]] = None,
                  fault_plan: Optional[FaultPlan] = None,
-                 clock: Callable[[], float] = time.perf_counter):
+                 clock: Callable[[], float] = time.perf_counter,
+                 tracer: Optional[Tracer] = None):
         if not isinstance(mesh, Mesh):
             raise TypeError(f"mesh must be a jax.sharding.Mesh, got "
                             f"{type(mesh).__name__}")
@@ -131,7 +133,7 @@ class ShardedWorker(QueueWorker):
                                  for a in const_axes))
         super().__init__(config, name=name, max_in_flight=max_in_flight,
                          explicit_transfers=explicit_transfers,
-                         fault_plan=fault_plan, clock=clock)
+                         fault_plan=fault_plan, clock=clock, tracer=tracer)
         # Cache identity: sharded captures must never collide with plain
         # single-device ones (or with a different mesh / rule table) in a
         # shared GraphCache.

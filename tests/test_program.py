@@ -4,9 +4,8 @@ explicit buffer-transfer commands.
 Pins the new contracts:
 
 * every built-in kernel family builds through one registry on multiple
-  ``EGPUConfig`` presets, numerically identical to the legacy
-  ``make_kernel`` construction, with ``(family, config, variant)``
-  memoization;
+  ``EGPUConfig`` presets, numerically identical to a direct builder call,
+  with ``(family, config, variant)`` memoization;
 * clSetKernelArg-style ``arg_info`` / ``set_args`` / ``enqueue_kernel``;
 * ``enqueue_write_buffer`` / ``read_buffer`` / ``copy_buffer`` return real
   transfer-only-costed events that compose with markers/barriers,
@@ -18,7 +17,6 @@ Pins the new contracts:
 """
 
 import importlib
-import warnings
 
 import jax
 import jax.numpy as jnp
@@ -84,8 +82,8 @@ def test_registry_builds_every_family(family, config):
     assert kern.counts is not None
     # memoized: a second program build hands out the SAME kernel object
     assert Program.build(config).create_kernel(family) is kern
-    # numerically identical to the legacy make_kernel construction (a fresh
-    # builder call, i.e. a distinct kernel object built the legacy way)
+    # numerically identical to a direct builder call (a fresh,
+    # distinct kernel object that bypasses the registry memo)
     ops = importlib.import_module(BUILTIN_FAMILIES[family])
     legacy = ops.build_kernel(config)
     ins = _family_inputs(family)
@@ -102,15 +100,6 @@ def test_program_exposes_all_seven_builtin_families():
     kernels = program.create_kernels()
     assert set(BUILTIN_FAMILIES) <= set(kernels)
     assert len(BUILTIN_FAMILIES) == 7
-
-
-def test_make_kernel_shim_warns_and_returns_memoized_kernel():
-    from repro.kernels.gemm import ops as gemm_ops
-    with warnings.catch_warnings(record=True) as w:
-        warnings.simplefilter("always")
-        legacy = gemm_ops.make_kernel(EGPU_16T)
-    assert any(issubclass(x.category, DeprecationWarning) for x in w)
-    assert legacy is Program.build(EGPU_16T).create_kernel("gemm")
 
 
 def test_variants_and_configs_are_distinct_memo_entries():

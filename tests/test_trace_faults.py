@@ -1,0 +1,126 @@
+"""Trace completeness under injected faults (ISSUE 7 satellite).
+
+The span-tree contract must hold under adversity, not just on the happy
+path: for ANY seeded :class:`~repro.serve.faults.FaultPlan` — launch
+failures, latency spikes, lane blackouts, retry storms, breaker trips,
+dispatch exhaustion — every accepted rid's trace ends in exactly one
+terminal span (``result`` or a named ``shed``), retries and breaker trips
+are recorded as span events, and no tree is ever left dangling.  A seeded
+parametrized sweep runs everywhere; the hypothesis property sweep rides
+where the package is available (CI installs it).
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import EGPU_16T, Kernel, Stage
+from repro.kernels.gemm.ref import counts as gemm_counts
+from repro.kernels.gemm.ref import gemm_ref
+from repro.obs import TERMINAL_SPANS, Tracer, validate_chrome_trace
+from repro.serve import (AdmissionError, Blackout, FaultPlan, Server,
+                        env_seed)
+
+LANE0 = "0:e-gpu-16t"
+
+
+def _mm_stages(d=8, seed=0, n=2):
+    rng = np.random.default_rng(seed)
+    w = jnp.asarray(rng.standard_normal((d, d)) * 0.2, jnp.float32)
+
+    def mlp(x, w):
+        return jnp.maximum(gemm_ref(x, w), 0.0)
+
+    kern = Kernel("mlp", executor=mlp,
+                  counts=lambda **kw: gemm_counts(m=d, n=d, k=d))
+    return [Stage(kern, consts=(w,), n_inputs=1) for _ in range(n)]
+
+
+def _traced_fault_scenario(seed, p_fail, p_spike, spike_s, blackout_len):
+    """Drive a traced 2-lane server through a seeded FaultPlan and assert
+    the ISSUE-7 completeness contract on the resulting span forest."""
+    stages = _mm_stages()
+    plan = FaultPlan(seed=seed, p_launch_fail=p_fail,
+                     p_latency_spike=p_spike, latency_spike_s=spike_s,
+                     blackouts=(Blackout(LANE0, 1, blackout_len),))
+    t = [0.0]
+    tracer = Tracer()
+    srv = Server(stages, workers=(EGPU_16T, EGPU_16T), bucket_sizes=(8,),
+                 max_batch=2, max_pending=8, fault_plan=plan,
+                 breaker_threshold=2, breaker_cooldown=2,
+                 clock=lambda: t[0], tracer=tracer)
+    rng = np.random.default_rng(seed)
+    accepted = []
+    for i in range(12):
+        x = jnp.asarray(rng.standard_normal((8, 8)), jnp.float32)
+        t[0] += float(rng.random()) * 1e-3
+        try:
+            accepted.append(srv.submit(x, deadline=10.0, priority=i % 3))
+        except AdmissionError:
+            pass                         # door-shed: never got a rid
+    srv.flush()
+
+    # completeness: every ACCEPTED rid grew a tree, every tree is closed
+    # with exactly one terminal — never dangling, even mid-blackout
+    assert tracer.request_rids() == sorted(accepted)
+    assert tracer.validate_request_trees() == []
+    n_result = n_shed = 0
+    for rid in accepted:
+        root = tracer.request_root(rid)
+        terminals = [s for s in tracer.children(root)
+                     if s.name in TERMINAL_SPANS]
+        assert len(terminals) == 1
+        if terminals[0].name == "result":
+            n_result += 1
+        else:
+            n_shed += 1
+            assert terminals[0].attrs.get("reason")   # sheds carry a why
+    rep = srv.report()
+    assert n_result == rep.n_requests
+    assert n_shed <= rep.n_shed          # report counts door-sheds too
+
+    # mid-flight adversity leaves span-event footprints on the roots
+    events = [name for rid in accepted
+              for (_, name, _) in tracer.request_root(rid).events]
+    if rep.n_retries:
+        assert events.count("retry") >= 1
+        assert events.count("fault") >= rep.n_retries
+    if rep.n_quarantines:
+        assert "breaker-trip" in events
+    # and the export still schema-validates
+    assert validate_chrome_trace(tracer.to_chrome_json()) == []
+    return n_result, n_shed
+
+
+@pytest.mark.parametrize("seed,p_fail,p_spike,blackout_len", [
+    (env_seed(10), 0.0, 0.0, 0),         # fault-free control
+    (env_seed(11), 0.2, 0.3, 2),         # mixed faults
+    (env_seed(12), 0.6, 0.0, 4),         # failure-heavy + long blackout
+    (env_seed(13), 0.0, 1.0, 0),         # spike-only
+])
+def test_every_accepted_rid_ends_in_one_terminal_seeded(seed, p_fail,
+                                                        p_spike,
+                                                        blackout_len):
+    n_result, n_shed = _traced_fault_scenario(seed, p_fail, p_spike, 0.05,
+                                              blackout_len)
+    if p_fail == 0.0 and blackout_len == 0:
+        assert n_shed == 0               # fault-free: nothing shed
+
+
+def test_trace_terminates_under_any_fault_plan_property():
+    """Hypothesis sweep (ISSUE 7 satellite): the completeness contract
+    holds for adversarially-chosen FaultPlan parameters."""
+    pytest.importorskip("hypothesis")    # not baked into every image
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+
+    @settings(max_examples=8, deadline=None)
+    @given(seed=st.integers(0, 2**31 - 1),
+           p_fail=st.floats(0.0, 0.8),
+           p_spike=st.floats(0.0, 1.0),
+           spike_s=st.floats(0.0, 0.5),
+           blackout_len=st.integers(0, 5))
+    def prop(seed, p_fail, p_spike, spike_s, blackout_len):
+        _traced_fault_scenario(seed, p_fail, p_spike, spike_s, blackout_len)
+
+    prop()
