@@ -3,7 +3,8 @@
 Public API:
 
 * configs/knobs:  :class:`EGPUConfig`, presets ``EGPU_4T/8T/16T``, ``HOST``,
-  :class:`KernelKnobs` (TPU projection)
+  :class:`KernelKnobs` (TPU projection), DVFS :class:`OperatingPoint`\\ s
+  (``OP_ANCHOR``, ``OPERATING_POINTS``, ``EGPUConfig.at``)
 * execution model: :class:`NDRange`, :func:`schedule`, :func:`optimal_ndrange`
 * runtime (Tiny-OpenCL subset): :class:`Context`, :class:`Device`,
   :class:`CommandQueue` (kernels + explicit write/read/copy transfer
@@ -17,14 +18,16 @@ Public API:
 """
 
 from .apu import APU, PipelineReport, Stage, StageReport
-from .device import (EGPU_4T, EGPU_8T, EGPU_16T, HOST, PRESETS, EGPUConfig,
-                     KernelKnobs, check_vmem_budget)
+from .device import (EGPU_4T, EGPU_8T, EGPU_16T, HOST, OP_ANCHOR,
+                     OPERATING_POINTS, PRESETS, EGPUConfig, KernelKnobs,
+                     OperatingPoint, check_vmem_budget, env_op_point)
 from .machine import (CAL, PhaseBreakdown, WorkCounts, egpu_time,
                       fuse_breakdowns, host_time, speedup, transfer_time)
 from .ndrange import NDRange, crop_from_groups, edge_mask, global_ids, pad_to_groups
-from .power import (StaticCharacter, characterize, egpu_active_power_mw,
-                    egpu_energy_j, energy_reduction, host_active_power_mw,
-                    host_energy_j)
+from .power import (StaticCharacter, characterize, dynamic_scale,
+                    egpu_active_power_mw, egpu_energy_j, egpu_idle_power_mw,
+                    energy_reduction, host_active_power_mw, host_energy_j,
+                    leakage_scale)
 from .program import (BUILTIN_FAMILIES, REGISTRY, KernelRegistry, Program,
                       kernel_family)
 from .runtime import (ArgInfo, Buffer, CommandGraph, CommandQueue, Context,
@@ -33,13 +36,15 @@ from .scheduler import Schedule, optimal_ndrange, schedule
 
 __all__ = [
     "APU", "PipelineReport", "Stage", "StageReport",
-    "EGPU_4T", "EGPU_8T", "EGPU_16T", "HOST", "PRESETS", "EGPUConfig",
-    "KernelKnobs", "check_vmem_budget",
+    "EGPU_4T", "EGPU_8T", "EGPU_16T", "HOST", "OP_ANCHOR", "OPERATING_POINTS",
+    "PRESETS", "EGPUConfig", "KernelKnobs", "OperatingPoint",
+    "check_vmem_budget", "env_op_point",
     "CAL", "PhaseBreakdown", "WorkCounts", "egpu_time", "fuse_breakdowns",
     "host_time", "speedup", "transfer_time",
     "NDRange", "crop_from_groups", "edge_mask", "global_ids", "pad_to_groups",
-    "StaticCharacter", "characterize", "egpu_active_power_mw", "egpu_energy_j",
-    "energy_reduction", "host_active_power_mw", "host_energy_j",
+    "StaticCharacter", "characterize", "dynamic_scale", "egpu_active_power_mw",
+    "egpu_energy_j", "egpu_idle_power_mw", "energy_reduction",
+    "host_active_power_mw", "host_energy_j", "leakage_scale",
     "BUILTIN_FAMILIES", "REGISTRY", "KernelRegistry", "Program",
     "kernel_family",
     "ArgInfo", "Buffer", "CommandGraph", "CommandQueue", "Context", "Device",

@@ -10,6 +10,15 @@ This module holds:
 
 * :class:`EGPUConfig` — the exact hardware knobs of paper Table II, with the
   three presets of Table III (4T / 8T / 16T) plus the X-HEEP host baseline.
+* :class:`OperatingPoint` — a DVFS (frequency, voltage) pair.  The paper
+  characterizes everything at 300 MHz / 0.8 V TSMC16 (:data:`OP_ANCHOR`);
+  X-HEEP-class platforms expose the full knob space, so a config can be
+  rebased onto any point with :meth:`EGPUConfig.at` and the power model
+  (:mod:`repro.core.power`) scales dynamic power ∝ f·V² and leakage with
+  voltage.  ``freq_hz``/``voltage_v`` are ordinary config fields, so every
+  memoization key that includes the config (program/kernel registries, the
+  serve-path :class:`~repro.serve.cache.GraphCache`) automatically keys on
+  the operating point too.
 * :class:`KernelKnobs` — the TPU-native projection of those knobs: Pallas
   BlockSpec tile shapes, pipeline (double-buffering) depth and a VMEM
   working-set budget.  ``EGPUConfig.tpu_knobs()`` performs the mapping
@@ -23,7 +32,8 @@ they can parameterize jitted functions as static arguments.
 from __future__ import annotations
 
 import dataclasses
-from typing import Tuple
+import os
+from typing import Dict, Optional, Tuple
 
 KIB = 1024
 MIB = 1024 * KIB
@@ -32,6 +42,70 @@ MIB = 1024 * KIB
 TPU_VMEM_BYTES = 16 * MIB  # usable VMEM per core (conservative)
 TPU_LANES = 128            # VPU/MXU minor dimension
 TPU_SUBLANES = 8           # VPU second-minor dimension (float32)
+
+
+@dataclasses.dataclass(frozen=True)
+class OperatingPoint:
+    """One DVFS point: the (frequency, voltage) pair a config runs at.
+
+    The paper's post-synthesis characterization is pinned at
+    300 MHz / 0.8 V (:data:`OP_ANCHOR`); the named table
+    :data:`OPERATING_POINTS` adds a low-voltage retention-class point and a
+    turbo point in the ranges X-HEEP-class TSMC16 platforms expose.  Points
+    are plain frozen dataclasses so they hash into memoization keys.
+    """
+
+    name: str
+    freq_hz: float
+    voltage_v: float
+
+    def validate(self) -> "OperatingPoint":
+        if self.freq_hz <= 0.0:
+            raise ValueError(f"freq_hz must be positive, got {self.freq_hz}")
+        if self.voltage_v <= 0.0:
+            raise ValueError(
+                f"voltage_v must be positive, got {self.voltage_v}")
+        return self
+
+
+#: the paper's calibration anchor: every fitted power/area constant in
+#: :mod:`repro.core.power` describes silicon at this point, and the model is
+#: bit-identical to the pre-DVFS one here (scale factors are exactly 1.0).
+OP_ANCHOR = OperatingPoint("nominal", 300e6, 0.8).validate()
+
+#: named DVFS points (f scales roughly linearly with V over this range, the
+#: usual near-threshold..nominal TSMC16 corridor)
+OPERATING_POINTS: Dict[str, OperatingPoint] = {
+    p.name: p for p in (
+        OperatingPoint("low", 100e6, 0.60).validate(),
+        OP_ANCHOR,
+        OperatingPoint("turbo", 450e6, 0.95).validate(),
+    )
+}
+
+
+def env_op_point(value: Optional[str] = None) -> Optional[OperatingPoint]:
+    """Resolve the ``REPRO_OP_POINT`` environment override (CI's non-anchor
+    leg re-runs the serving suites under it to pin op-point-independent
+    bit-identical outputs).
+
+    ``value`` (or the env var) is a name from :data:`OPERATING_POINTS` or an
+    explicit ``"<freq_hz>:<voltage_v>"`` pair, e.g. ``"200e6:0.7"``.
+    Returns ``None`` when unset/empty.
+    """
+    raw = os.environ.get("REPRO_OP_POINT", "") if value is None else value
+    raw = raw.strip()
+    if not raw:
+        return None
+    if raw in OPERATING_POINTS:
+        return OPERATING_POINTS[raw]
+    parts = raw.split(":")
+    if len(parts) != 2:
+        raise ValueError(
+            f"REPRO_OP_POINT={raw!r}: expected a name in "
+            f"{sorted(OPERATING_POINTS)} or '<freq_hz>:<voltage_v>'")
+    return OperatingPoint(f"env:{raw}", float(parts[0]),
+                          float(parts[1])).validate()
 
 
 @dataclasses.dataclass(frozen=True)
@@ -57,6 +131,7 @@ class EGPUConfig:
     host_bus_bytes_per_cycle: int = 4  # 32-bit OBI beats (paper §VIII-B)
     freq_hz: float = 300e6          # paper: 300 MHz @ 0.8 V, TSMC16
     has_fpu: bool = False           # removed for TinyAI (paper §IV-A)
+    voltage_v: float = 0.8          # supply voltage of the operating point
 
     # ------------------------------------------------------------------
     # Derived quantities
@@ -75,9 +150,33 @@ class EGPUConfig:
     def cycle_s(self) -> float:
         return 1.0 / self.freq_hz
 
+    @property
+    def operating_point(self) -> OperatingPoint:
+        """This config's DVFS point (a named table entry when it matches
+        one exactly, else a ``custom`` point)."""
+        for p in OPERATING_POINTS.values():
+            if p.freq_hz == self.freq_hz and p.voltage_v == self.voltage_v:
+                return p
+        return OperatingPoint("custom", self.freq_hz, self.voltage_v)
+
+    def at(self, point: OperatingPoint) -> "EGPUConfig":
+        """The same silicon rebased onto another DVFS point.
+
+        Only ``freq_hz``/``voltage_v`` change — name and every structural
+        knob stay put, so ``config.at(OP_ANCHOR)`` round-trips exactly and
+        area (:func:`repro.core.power.characterize`) is invariant.
+        """
+        point.validate()
+        return dataclasses.replace(self, freq_hz=point.freq_hz,
+                                   voltage_v=point.voltage_v)
+
     def validate(self) -> "EGPUConfig":
         if self.compute_units < 1 or self.threads_per_cu < 1 or self.warps_per_cu < 1:
             raise ValueError(f"non-positive parallelism knob in {self}")
+        if self.freq_hz <= 0.0 or self.voltage_v <= 0.0:
+            raise ValueError(
+                f"operating point must be positive: freq_hz={self.freq_hz}, "
+                f"voltage_v={self.voltage_v}")
         for field in ("icache_bytes_per_cu", "dcache_bytes"):
             v = getattr(self, field)
             if v <= 0 or v & (v - 1):

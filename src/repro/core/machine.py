@@ -214,32 +214,38 @@ def fuse_breakdowns(stages: "Sequence[PhaseBreakdown]",
     Two modes:
 
     * ``deps=None`` (chain): every stage is serially dependent — transfer
-      and compute sum unchanged.  All stages must share one frequency.
+      and compute sum unchanged.
     * ``deps`` given (DAG critical path): ``deps[i]`` lists the indices of
       the stages node ``i`` waits on (an out-of-order queue's
       ``wait_events`` + dataflow edges, as captured by
       :class:`~repro.core.runtime.CommandGraph`).  Fused latency is the
       longest dependency path — concurrent branches overlap instead of
       summing.  A ``None`` entry in ``stages`` (a node with no machine
-      model) is a zero-cost pass-through on the path.  Stages may sit on
-      devices with different frequencies (host + e-GPU nodes in one
-      capture); phases are normalized to the fastest clock.
+      model) is a zero-cost pass-through on the path.
 
-    In both modes startup + scheduling are paid once (the max across
-    stages); for a linear chain the two modes agree exactly.
+    In both modes stages may sit on devices with different clocks — host +
+    e-GPU nodes in one capture, or e-GPU stages priced at different DVFS
+    :class:`~repro.core.device.OperatingPoint`\\ s (ISSUE 8): every phase is
+    normalized per stage by *its own* ``freq_hz`` onto the fastest clock, so
+    wall time is preserved exactly.  (Chain mode used to assume one
+    config-default frequency and reject mixes — latent breakage once
+    op-points landed; pinned by the mixed-op-point regression tests.)
+    Startup + scheduling are paid once (the normalized max across stages);
+    for a linear chain the two modes agree exactly.
     """
     if deps is None:
         stages = [s for s in stages if s is not None]
         if not stages:
             raise ValueError("fuse_breakdowns needs at least one PhaseBreakdown")
-        freq = stages[0].freq_hz
-        if any(s.freq_hz != freq for s in stages):
-            raise ValueError("cannot fuse breakdowns across devices/frequencies")
+        freq = max(s.freq_hz for s in stages)
+        # per-stage normalization onto the fastest clock; for a uniform-
+        # frequency chain every scale is exactly 1.0, keeping the historical
+        # numbers bit-identical
         return PhaseBreakdown(
-            startup=max(s.startup for s in stages),
-            scheduling=max(s.scheduling for s in stages),
-            transfer=sum(s.transfer for s in stages),
-            compute=sum(s.compute for s in stages),
+            startup=max(s.startup * (freq / s.freq_hz) for s in stages),
+            scheduling=max(s.scheduling * (freq / s.freq_hz) for s in stages),
+            transfer=sum(s.transfer * (freq / s.freq_hz) for s in stages),
+            compute=sum(s.compute * (freq / s.freq_hz) for s in stages),
             freq_hz=freq,
         )
 

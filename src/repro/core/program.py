@@ -181,7 +181,13 @@ class Program:
     @classmethod
     def build(cls, config: EGPUConfig = EGPU_16T,
               registry: Optional[KernelRegistry] = None) -> "Program":
-        """clBuildProgram analogue (memoized — building twice is free)."""
+        """clBuildProgram analogue (memoized — building twice is free).
+
+        The key is the *whole* frozen config, so a program (and below, every
+        kernel) builds once per (structural knobs, DVFS operating point):
+        ``config.at(point)`` yields a distinct config and therefore a
+        distinct memo entry — op-points never alias (ISSUE 8).
+        """
         reg = registry if registry is not None else REGISTRY
         key = (id(reg), config)
         prog = cls._programs.get(key)

@@ -589,6 +589,16 @@ class CommandQueue:
     def _model(self, kernel: Kernel, ndr: NDRange,
                counts_params: Dict[str, Any], resident: bool
                ) -> Tuple[Optional[PhaseBreakdown], Optional[float]]:
+        """Machine-model (breakdown, energy) of one enqueued command.
+
+        Operating-point audit (ISSUE 8): the config comes off the queue's
+        device, so the breakdown is stamped with *that config's* clock
+        (``PhaseBreakdown.freq_hz``) and energy prices at its (f, V) point —
+        a graph captured at one DVFS point books honest numbers at any
+        other, and downstream consumers (fusion, spikes, sharding, serve
+        decomposition) all re-derive from the breakdown's own ``freq_hz``,
+        never from a config default.
+        """
         if not self.profile or kernel.counts is None:
             return None, None
         counts = kernel.counts(**counts_params)

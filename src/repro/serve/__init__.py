@@ -34,7 +34,18 @@ engine:
   stack's telemetry into a :class:`~repro.obs.MetricsRegistry`, and
   :attr:`ServeReport.latency_decomposition_s` carries the p50/p99 flame
   attribution over :data:`DECOMP_PHASES`.  All opt-in: an untraced server
-  allocates nothing from ``repro.obs`` on its hot dispatch path.
+  allocates nothing from ``repro.obs`` on its hot dispatch path;
+* power-budget-aware serving (ISSUE 8) — ``Server(power_budget=...)``
+  installs a :class:`PowerBudget` (per-lane and/or fleet caps in mW, the
+  paper's <= 28 mW envelope) on the dispatcher, which prices every
+  candidate lane per launch (:class:`LanePrice`: modeled window,
+  window-average power, requests-per-joule), routes to the most efficient
+  on-budget lane, throttles breachy candidates, and sheds loudly with
+  :class:`PowerBudgetError` when no lane has headroom.  Idle lanes burn
+  their clock-gated leakage floor in :class:`ServeReport`'s honest fleet
+  energy, and every launch re-audits its booked window price
+  (``n_budget_violations`` must stay 0).  Composes with DVFS operating
+  points (:class:`~repro.core.OperatingPoint`, ``EGPUConfig.at``).
 """
 
 from .batching import (BucketBatcher, MicroBatch, ServeRequest,
@@ -42,9 +53,11 @@ from .batching import (BucketBatcher, MicroBatch, ServeRequest,
 from .cache import (GraphCache, input_signature, stage_signature,
                     stages_signature)
 from .dispatch import (CircuitBreaker, DispatchError, LaunchTicket,
-                       MultiQueueDispatcher, QueueStats, QueueWorker)
+                       MultiQueueDispatcher, PowerBudgetError, QueueStats,
+                       QueueWorker)
 from .faults import (Blackout, FaultDecision, FaultPlan, InjectedFault,
                      apply_spike, env_seed)
+from .power import LanePrice, PowerBudget
 from .server import (DECOMP_PERCENTILES, DECOMP_PHASES, PERCENTILES,
                      AdmissionError, Server, ServeReport)
 from .sharded import (BATCH_AXIS, ShardedWorker, data_mesh, mesh_signature,
@@ -54,9 +67,10 @@ __all__ = [
     "BucketBatcher", "MicroBatch", "ServeRequest", "batched_stages", "pad_to",
     "GraphCache", "input_signature", "stage_signature", "stages_signature",
     "CircuitBreaker", "DispatchError", "LaunchTicket", "MultiQueueDispatcher",
-    "QueueStats", "QueueWorker",
+    "PowerBudgetError", "QueueStats", "QueueWorker",
     "Blackout", "FaultDecision", "FaultPlan", "InjectedFault", "apply_spike",
     "env_seed",
+    "LanePrice", "PowerBudget",
     "DECOMP_PERCENTILES", "DECOMP_PHASES", "PERCENTILES",
     "AdmissionError", "Server", "ServeReport",
     "BATCH_AXIS", "ShardedWorker", "data_mesh", "mesh_signature",

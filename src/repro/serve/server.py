@@ -54,13 +54,14 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..core.apu import Stage
-from ..core.device import EGPUConfig, EGPU_16T
+from ..core.device import EGPUConfig, EGPU_16T, OP_ANCHOR, env_op_point
 from ..obs import MetricsRegistry, Tracer
 from .batching import BucketBatcher, MicroBatch, batched_stages
 from .cache import GraphCache, stages_signature
 from .dispatch import (DispatchError, LaunchTicket, MultiQueueDispatcher,
-                       QueueStats, QueueWorker)
+                       PowerBudgetError, QueueStats, QueueWorker)
 from .faults import FaultPlan
+from .power import PowerBudget
 
 PERCENTILES = (50, 90, 99)
 
@@ -137,6 +138,36 @@ class ServeReport:
     #: :data:`DECOMP_PHASES`); empty before any profiled completion
     latency_decomposition_s: Dict[str, Dict[int, float]] = \
         dataclasses.field(default_factory=dict)
+    # -- power & energy accounting (ISSUE 8) --------------------------------
+    #: modeled average fleet power over the serving makespan:
+    #: ``fleet_energy_j / makespan``; 0.0 before any modeled launch
+    avg_fleet_power_w: float = 0.0
+    #: peak modeled instantaneous fleet draw, sampled at every budgeted
+    #: launch (0.0 when serving uncapped — nothing samples it)
+    peak_fleet_power_w: float = 0.0
+    #: idle-lane leakage integrated over the modeled makespan — each lane
+    #: burns its clock-gated floor (§IV SLEEP_REQ) whenever it is not
+    #: serving, energy the active-only ledger used to omit
+    fleet_idle_energy_j: float = 0.0
+    #: honest fleet energy: active launch energy + idle-lane leakage
+    fleet_energy_j: float = 0.0
+    #: completed requests per modeled second per watt of modeled fleet
+    #: draw — algebraically, requests per joule of ``fleet_energy_j``
+    requests_per_s_per_watt: float = 0.0
+    #: in-deadline completions per modeled second per watt — the
+    #: ``bench=power`` gate's goodput-per-watt number
+    goodput_per_s_per_watt: float = 0.0
+    #: requests shed because no lane could take them on-budget
+    n_power_shed: int = 0
+    #: candidate lanes skipped during routing for a budget breach
+    n_power_throttled: int = 0
+    #: launches whose booked window-average power broke the lane cap —
+    #: MUST stay 0 while the dispatcher enforces the budget (hypothesis-
+    #: swept in tests/test_power_serve.py)
+    n_budget_violations: int = 0
+    #: the configured caps (mW), ``None`` when serving uncapped
+    power_budget_lane_mw: Optional[float] = None
+    power_budget_fleet_mw: Optional[float] = None
 
     def publish_metrics(self, registry: MetricsRegistry) -> MetricsRegistry:
         """Publish this report (and its per-queue / cache roll-ups) into a
@@ -177,6 +208,33 @@ class ServeReport:
         g("repro_serve_energy_per_request_joules",
           "modeled energy per request").set(
             self.modeled_energy_per_request_j)
+        # power telemetry (ISSUE 8)
+        g("repro_fleet_avg_power_watts",
+          "modeled average fleet power over the makespan").set(
+            self.avg_fleet_power_w)
+        g("repro_fleet_peak_power_watts",
+          "peak modeled instantaneous fleet draw").set(
+            self.peak_fleet_power_w)
+        g("repro_fleet_energy_joules",
+          "fleet energy incl. idle leakage").set(self.fleet_energy_j)
+        g("repro_fleet_idle_energy_joules",
+          "idle-lane leakage over the makespan").set(
+            self.fleet_idle_energy_j)
+        g("repro_serve_requests_per_second_per_watt",
+          "completed requests per modeled second per watt").set(
+            self.requests_per_s_per_watt)
+        g("repro_serve_goodput_per_second_per_watt",
+          "in-deadline completions per modeled second per watt").set(
+            self.goodput_per_s_per_watt)
+        c("repro_serve_power_shed_total",
+          "requests shed because no lane had power headroom").set_total(
+            self.n_power_shed)
+        c("repro_serve_power_throttled_total",
+          "lane candidates skipped for a budget breach").set_total(
+            self.n_power_throttled)
+        c("repro_serve_budget_violations_total",
+          "launches booked over the lane power cap").set_total(
+            self.n_budget_violations)
         lat = g("repro_serve_modeled_latency_seconds",
                 "modeled request latency percentiles")
         for p, v in self.modeled_latency_s.items():
@@ -230,6 +288,27 @@ class ServeReport:
                 f"{self.n_shed} shed  "
                 f"{self.n_deadline_violations} deadline misses  "
                 f"{self.deadline_flushes} deadline flushes")
+        if self.fleet_energy_j > 0.0:
+            budget = ""
+            if (self.power_budget_lane_mw is not None
+                    or self.power_budget_fleet_mw is not None):
+                caps = [f"lane<={self.power_budget_lane_mw:g} mW"
+                        if self.power_budget_lane_mw is not None else "",
+                        f"fleet<={self.power_budget_fleet_mw:g} mW"
+                        if self.power_budget_fleet_mw is not None else ""]
+                budget = "  budget " + " ".join(cp for cp in caps if cp)
+            lines.append(
+                f"power           avg {self.avg_fleet_power_w * 1e3:.2f} mW "
+                f"(peak {self.peak_fleet_power_w * 1e3:.2f} mW)  "
+                f"energy {self.fleet_energy_j * 1e6:.1f} uJ "
+                f"(idle {self.fleet_idle_energy_j * 1e6:.1f} uJ)  "
+                f"goodput/W {self.goodput_per_s_per_watt:,.0f}" + budget)
+        if (self.n_power_shed or self.n_power_throttled
+                or self.n_budget_violations):
+            lines.append(
+                f"power events    {self.n_power_shed} power sheds  "
+                f"{self.n_power_throttled} throttles  "
+                f"{self.n_budget_violations} budget violations")
         if (self.n_retries or self.n_quarantines
                 or self.n_dispatch_failures):
             lines.append(
@@ -302,18 +381,29 @@ class Server:
                  fault_plan: Optional[FaultPlan] = None,
                  breaker_threshold: int = 3, breaker_cooldown: int = 8,
                  clock: Callable[[], float] = time.perf_counter,
-                 tracer: Optional[Tracer] = None):
+                 tracer: Optional[Tracer] = None,
+                 power_budget: Optional[PowerBudget] = None):
         self.stages = tuple(stages)
         self.clock = clock
         self.max_pending = max_pending
         self.admission = admission
         self.deadline_flush = deadline_flush
+        #: power envelope (ISSUE 8): when set, the dispatcher prices every
+        #: candidate lane and routes for requests-per-joule under the caps
+        self.power_budget = power_budget
+        self._n_power_shed = 0
         #: opt-in span tracer (ISSUE 7), installed on the dispatcher and
         #: every lane; ``None`` (the default) keeps the hot dispatch path
         #: free of any obs allocation — every hook guards on it
         self.tracer = tracer
         self.batcher = BucketBatcher(bucket_sizes, max_batch=max_batch,
                                      fill=fill, crop_outputs=crop_outputs)
+        # REPRO_OP_POINT (ISSUE 8): rebase anchor-point config presets onto
+        # the environment's DVFS operating point — outputs must stay
+        # bit-identical across op points (CI re-runs the serve suite under
+        # it), only modeled time/power move.  Pre-built workers and configs
+        # already rebased via ``config.at(point)`` keep their chosen point.
+        point = env_op_point()
         lanes = []
         for i, w in enumerate(workers):
             if isinstance(w, QueueWorker):
@@ -325,12 +415,15 @@ class Server:
                     w.tracer = tracer
                 lanes.append(w)
             else:
+                cfg = (w.at(point) if point is not None
+                       and w.operating_point is OP_ANCHOR else w)
                 lanes.append(QueueWorker(
-                    w, name=f"{i}:{w.name}", max_in_flight=max_in_flight,
+                    cfg, name=f"{i}:{w.name}", max_in_flight=max_in_flight,
                     fault_plan=fault_plan, clock=clock, tracer=tracer))
         self.dispatcher = MultiQueueDispatcher(
             lanes, failure_threshold=breaker_threshold,
-            breaker_cooldown=breaker_cooldown, tracer=tracer)
+            breaker_cooldown=breaker_cooldown, tracer=tracer,
+            budget=power_budget)
         self.cache = GraphCache(cache_capacity)
         # Every micro-batch is padded to max_batch, so ONE batched pipeline
         # covers all traffic; its (const-hashing) signature is computed once
@@ -609,17 +702,36 @@ class Server:
                             "cache-hit" if hit else "cache-miss",
                             lane=worker.name)
                 return graph
+
+            # Power routing prices EVERY candidate lane, not just the
+            # chosen one — a quiet estimator keeps speculative pricing out
+            # of the request trace (graph_for emits cache events per call)
+            estimate_for = None
+            if self.dispatcher.budget is not None:
+                def estimate_for(worker: QueueWorker,
+                                 batch: MicroBatch = batch):
+                    graph, _hit = self.cache.get_or_capture(
+                        worker.apu, self._bstages, batch.inputs,
+                        key_prefix=self._bsig)
+                    return worker.estimate(graph)
             try:
                 _ticket, retired = self.dispatcher.dispatch(
-                    batch, graph_for, t_now=self.clock())
+                    batch, graph_for, t_now=self.clock(),
+                    estimate_for=estimate_for)
             except DispatchError as e:
-                # the batch exhausted every lane/retry: its launches never
-                # happened, so shed every carried request LOUDLY — the
-                # backpressure-retired tickets from failed attempts were
-                # real launches and still finalize below
+                # the batch exhausted every lane/retry (or, under a power
+                # budget, no lane could take it on-budget): its launches
+                # never happened, so shed every carried request LOUDLY —
+                # the backpressure-retired tickets from failed attempts
+                # were real launches and still finalize below
                 self._finalize(e.retired)
+                if isinstance(e, PowerBudgetError):
+                    self._n_power_shed += len(batch.requests)
+                    reason = f"power budget shed: {e}"
+                else:
+                    reason = f"dispatch failed: {e}"
                 for req in batch.requests:
-                    self._record_shed(req.rid, f"dispatch failed: {e}")
+                    self._record_shed(req.rid, reason)
                 continue
             self._finalize(retired)
 
@@ -735,6 +847,16 @@ class Server:
                             np.asarray(self._decomp[phase], np.float64), p))
                         for p in DECOMP_PERCENTILES}
                 for phase in DECOMP_PHASES}
+        # -- power & energy (ISSUE 8): honest fleet energy over the modeled
+        # makespan — active launch energy per lane, plus each lane's
+        # clock-gated leakage floor (§IV SLEEP_REQ) for every modeled second
+        # it was NOT serving.  All derived efficiency numbers divide by the
+        # honest total, never the active-only ledger.
+        active_energy = sum(qs.energy_j for qs in queues)
+        idle_energy = (sum(max(0.0, modeled_span - qs.modeled_s)
+                           * qs.idle_power_w for qs in queues)
+                       if modeled_span > 0 else 0.0)
+        fleet_energy = active_energy + idle_energy
         return ServeReport(
             n_requests=self._n_done,
             n_batches=n_batches,
@@ -759,6 +881,22 @@ class Server:
             n_dispatch_failures=self.dispatcher.dispatch_failures,
             n_quarantines=self.dispatcher.quarantines(),
             latency_decomposition_s=decomp,
+            avg_fleet_power_w=(fleet_energy / modeled_span
+                               if modeled_span > 0 else 0.0),
+            peak_fleet_power_w=self.dispatcher.peak_fleet_power_w,
+            fleet_idle_energy_j=idle_energy,
+            fleet_energy_j=fleet_energy,
+            requests_per_s_per_watt=(self._n_done / fleet_energy
+                                     if fleet_energy > 0 else 0.0),
+            goodput_per_s_per_watt=(self._n_in_deadline / fleet_energy
+                                    if fleet_energy > 0 else 0.0),
+            n_power_shed=self._n_power_shed,
+            n_power_throttled=self.dispatcher.power_throttles,
+            n_budget_violations=sum(qs.budget_violations for qs in queues),
+            power_budget_lane_mw=(None if self.power_budget is None
+                                  else self.power_budget.lane_mw),
+            power_budget_fleet_mw=(None if self.power_budget is None
+                                   else self.power_budget.fleet_mw),
         )
 
     def publish_metrics(self, registry: Optional[MetricsRegistry] = None

@@ -229,6 +229,20 @@ class ShardedWorker(QueueWorker):
         self._shard_memo[graph] = memo
         return memo
 
+    # -- power pricing (ISSUE 8) ---------------------------------------------
+    def estimate(self, graph: CommandGraph
+                 ) -> Tuple[Optional[PhaseBreakdown], float]:
+        """The dispatcher's pricing view of a launch on this mesh lane:
+        the shard-scaled breakdown :meth:`_do_launch` would book (energy
+        stays total — the same ops run, just spread over more devices, so
+        a sharded lane prices a *higher* window-average power over its
+        *shorter* window, exactly the physics a fleet budget must see)."""
+        fused, energy = graph.fused_modeled()
+        if fused is not None:
+            _in, _out, shards, _ = self.shardings_for(graph)
+            fused = shard_breakdown(fused, shards)
+        return fused, energy
+
     # -- launch --------------------------------------------------------------
     def _do_launch(self, graph: CommandGraph, batch: MicroBatch
                    ) -> Tuple[Tuple[Buffer, ...],

@@ -423,9 +423,11 @@ def test_fuse_dag_mixed_frequencies_normalize():
     dag = fuse_breakdowns([a, b], deps=[(), (0,)])
     assert dag.total_s == pytest.approx(2e-6)
     assert dag.freq_hz == 300e6          # normalized to the fastest clock
-    # chain mode still refuses mixed frequencies (no deps to overlap with)
-    with pytest.raises(ValueError):
-        fuse_breakdowns([a, b])
+    # chain mode normalizes per stage too (ISSUE 8: stages priced at
+    # different DVFS operating points fuse instead of raising) and agrees
+    # with the linear DAG exactly
+    chain = fuse_breakdowns([a, b])
+    assert chain == dag
 
 
 def test_fuse_dag_none_stages_are_zero_cost_passthrough():

@@ -314,8 +314,14 @@ def test_fuse_breakdowns_pays_dispatch_once():
     assert fused.total_cycles < 3 * pb.total_cycles
     with pytest.raises(ValueError):
         fuse_breakdowns([])
-    with pytest.raises(ValueError):
-        fuse_breakdowns([pb, dataclasses.replace(pb, freq_hz=1e6)])
+    # mixed clocks normalize instead of raising (ISSUE 8 DVFS op points):
+    # a slower stage's wall time is preserved on the fastest clock
+    slow = dataclasses.replace(pb, freq_hz=150e6)
+    mixed = fuse_breakdowns([pb, slow])
+    assert mixed.freq_hz == 300e6
+    assert mixed.total_s == pytest.approx(pb.total_s + slow.total_s
+                                          - (pb.startup + pb.scheduling)
+                                          / pb.freq_hz)
 
 
 # ---------------------------------------------------------------------------
