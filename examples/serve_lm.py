@@ -1,126 +1,90 @@
-"""Serving example: a synthetic LM-scoring request stream through
-``repro.serve.Server`` — batched offload on cached CommandGraphs across two
-e-GPU queues, ending in a :class:`ServeReport` printout.
+"""Serving example: autoregressive LM decode through the ISSUE 9
+continuous-batching engine — ``Server(engine=DecodeEngine(...))`` with
+per-request streaming, ending in a :class:`ServeReport` printout.
 
-The pipeline is a per-request token scorer built from the e-GPU kernel zoo
-(embedding gather -> GeMM+ReLU -> logits GeMM); requests are token-id
-sequences of ragged length, padded to shape buckets and coalesced into
-micro-batches.  The example doubles as a living integration test: it
-asserts that
+A reduced GQA transformer (plain KV cache) serves a staggered stream of
+prompts over a handful of decode slots: each request is prefilled
+batch-1, spliced into a free slot of the persistent batched decode state,
+and advanced one token per step by the replay of ONE cached
+``CommandGraph`` — freed slots admit the next waiting request
+mid-generation, and ``Server.stream`` yields each request's tokens as its
+steps land.  The example doubles as a living integration test: it asserts
+that
 
-* the warm server performs ZERO re-captures (every launch after the first
-  per bucket x worker is a GraphCache hit), and
-* every batched result is bit-identical to a per-request eager
-  ``APU.offload``.
+* the warm engine performs ZERO re-captures (one prefill graph + one
+  decode graph, every launch after that a GraphCache hit), and
+* every streamed result is bit-identical to eager whole-batch
+  ``greedy_generate`` — slot insertion never perturbs a neighbor.
 
 Run:  PYTHONPATH=src python examples/serve_lm.py
 """
 
+import time
+
+import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro import tinycl
-from repro.core import APU, EGPU_8T, EGPU_16T, Stage
-from repro.kernels.gemm.ref import counts as gemm_counts
-from repro.kernels.gemm.ref import gemm_ref
-from repro.serve import Server
+from repro.configs import ARCHS
+from repro.models import init_params, model_spec
+from repro.serve import DecodeEngine, Server
+from repro.train.serve import greedy_generate
 
-VOCAB, D, HIDDEN = 128, 32, 48
-BUCKETS = (16, 32, 64)
-MAX_BATCH = 4
-N_REQUESTS = 48
-
-
-# -- Tiny-OpenCL host API v2: the app registers its own kernel families -----
-# (weights are NOT baked in — they flow through Stage consts, so one kernel
-# object serves any checkpoint).  Registry kernels are memoized per
-# (family, config, variant): every worker / rebuild reuses the same objects
-# and the serve GraphCache keys on the registry identity.
-
-@tinycl.kernel_family("lm.embed")
-def _build_embed(config, *, s=BUCKETS[-1]):
-    return tinycl.Kernel(
-        "embed", executor=lambda ids, table: table[ids],
-        counts=lambda **kw: gemm_counts(m=s, n=D, k=1))
-
-
-@tinycl.kernel_family("lm.ffn")
-def _build_ffn(config, *, s=BUCKETS[-1]):
-    return tinycl.Kernel(
-        "ffn", executor=lambda x, w: jnp.maximum(gemm_ref(x, w), 0.0),
-        counts=lambda **kw: gemm_counts(m=s, n=HIDDEN, k=D))
-
-
-@tinycl.kernel_family("lm.logits")
-def _build_logits(config, *, s=BUCKETS[-1]):
-    return tinycl.Kernel(
-        "logits", executor=lambda x, w: gemm_ref(x, w),
-        counts=lambda **kw: gemm_counts(m=s, n=VOCAB, k=HIDDEN))
-
-
-def lm_stages(seed: int = 0):
-    """Per-request LM scorer: ids (s,) -> logits (s, VOCAB)."""
-    rng = np.random.default_rng(seed)
-    emb = jnp.asarray(rng.standard_normal((VOCAB, D)) * 0.1, jnp.float32)
-    w1 = jnp.asarray(rng.standard_normal((D, HIDDEN)) * 0.1, jnp.float32)
-    w2 = jnp.asarray(rng.standard_normal((HIDDEN, VOCAB)) * 0.1, jnp.float32)
-
-    # counts at the largest bucket (upper-bound model); one program per
-    # preset — the serve workers build their own for EGPU_8T
-    program = tinycl.Program.build(EGPU_16T)
-    return [
-        Stage(program.create_kernel("lm.embed"), consts=(emb,)),
-        Stage(program.create_kernel("lm.ffn"), consts=(w1,)),
-        Stage(program.create_kernel("lm.logits"), consts=(w2,)),
-    ]
-
-
-def request_stream(n: int, seed: int = 1):
-    rng = np.random.default_rng(seed)
-    for _ in range(n):
-        length = int(rng.integers(4, BUCKETS[-1] + 1))
-        yield jnp.asarray(rng.integers(0, VOCAB, (length,)), jnp.int32)
+ARCH = "qwen2.5-3b"
+SLOTS = 4
+N_REQUESTS = 12      # 3x oversubscribed: slots churn mid-generation
+PROMPT = 12
+MAX_NEW = 8
+MAX_LEN = PROMPT + MAX_NEW + 1
 
 
 def main():
-    stages = lm_stages()
-    server = Server(stages, workers=(EGPU_16T, EGPU_8T),
-                    bucket_sizes=BUCKETS, max_batch=MAX_BATCH,
-                    max_in_flight=2)
+    cfg = ARCHS[ARCH].reduced()
+    params = init_params(model_spec(cfg), jax.random.PRNGKey(0))
+    prompts = jnp.asarray(
+        np.random.default_rng(1).integers(0, cfg.vocab,
+                                          (N_REQUESTS, PROMPT)),
+        jnp.int32)
 
-    # -- warm-up: pre-capture every (bucket, worker) graph ------------------
-    captured = server.warmup(jnp.zeros((1,), jnp.int32))
-    assert captured == len(BUCKETS) * 2    # 3 buckets x 2 queues
-    warm = [(server.submit(ids), ids) for ids in request_stream(N_REQUESTS)]
-    server.flush()
+    engine = DecodeEngine(cfg, params, num_slots=SLOTS, max_len=MAX_LEN)
+    server = Server((), workers=(), engine=engine)
 
-    # -- steady state: warm server => ZERO re-captures ----------------------
-    assert server.cache.misses == captured, "warm-up missed a combination"
-    steady = [(server.submit(ids), ids)
-              for ids in request_stream(N_REQUESTS, seed=2)]
-    server.flush()
-    assert server.cache.misses == captured, (
-        "warm server re-captured a graph: "
-        f"{server.cache.misses} != {captured}")
+    # -- submit everything up front; stream one request while it decodes ----
+    t0 = time.perf_counter()
+    rids = [server.submit_decode(prompts[i], max_new=MAX_NEW)
+            for i in range(N_REQUESTS)]
+    streamed = list(server.stream(rids[0]))    # live per-step iterator
+    server.flush()                             # drain the remaining slots
+    wall = time.perf_counter() - t0
 
-    # -- batched == per-request eager offload, bit for bit ------------------
-    apu = APU(EGPU_16T)
-    for rid, ids in (warm + steady)[:: N_REQUESTS // 6]:
+    # -- zero re-capture: ONE prefill graph + ONE decode graph --------------
+    assert engine.cache.misses == 2, (
+        f"engine re-captured a graph: {engine.cache.stats()}")
+
+    # -- streamed == eager whole-batch greedy decode, bit for bit -----------
+    ref = np.asarray(greedy_generate(params, cfg, prompts, max_new=MAX_NEW,
+                                     max_len=MAX_LEN))
+    assert streamed == [int(t) for t in ref[0]], (
+        "streamed tokens diverged from eager greedy decode")
+    for i, rid in enumerate(rids):
         (got,) = server.result(rid)
-        ref_outs, _ = apu.offload(stages, (ids,), mode="eager")
-        assert got.shape == (ids.shape[0], VOCAB)
-        assert np.array_equal(np.asarray(got),
-                              np.asarray(ref_outs[0].data)), (
-            f"request {rid}: batched result diverged from eager offload")
+        assert np.array_equal(np.asarray(got), ref[i]), (
+            f"request {rid}: engine decode diverged from eager greedy")
 
     report = server.report()
+    roof = engine.roofline()
     print("=" * 72)
-    print(f"serve_lm: {report.n_requests} LM-scoring requests, "
-          f"{len(BUCKETS)} shape buckets, 2 e-GPU queues")
+    print(f"serve_lm: {N_REQUESTS} requests x {MAX_NEW} tokens ({ARCH} "
+          f"reduced) on {SLOTS} decode slots")
     print("=" * 72)
     print(report.summary())
-    print("\nserve_lm OK — warm cache re-captured nothing; batched results "
-          "bit-identical to eager offload")
+    print(f"\n{report.engine_tokens_per_s_modeled:,.0f} tok/s modeled "
+          f"({N_REQUESTS * MAX_NEW / wall:,.0f} tok/s wall incl. capture), "
+          f"occupancy {report.engine_slot_occupancy:.0%}, "
+          f"{roof.bytes_per_step:,.0f} B/step "
+          f"({roof.mem_bound_fraction:.0%} memory-bound)")
+    print("\nserve_lm OK — warm engine re-captured nothing; streamed "
+          "results bit-identical to eager greedy decode")
     return report
 
 

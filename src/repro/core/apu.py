@@ -218,8 +218,9 @@ class APU:
         for i, (stage, node) in enumerate(zip(stages, kernel_nodes)):
             ndr = (ndranges[i] if ndranges is not None
                    else optimal_ndrange(node.n_items, self.host.config))
-            costs.append(hq._model(stage.kernel, ndr, stage.counts_params,
-                                   resident=False))
+            modeled, energy, _counts = hq._model(
+                stage.kernel, ndr, stage.counts_params, resident=False)
+            costs.append((modeled, energy))
         return costs
 
     def offload(self, stages: Sequence["Stage"],

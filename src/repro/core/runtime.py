@@ -588,8 +588,15 @@ class CommandQueue:
 
     def _model(self, kernel: Kernel, ndr: NDRange,
                counts_params: Dict[str, Any], resident: bool
-               ) -> Tuple[Optional[PhaseBreakdown], Optional[float]]:
-        """Machine-model (breakdown, energy) of one enqueued command.
+               ) -> Tuple[Optional[PhaseBreakdown], Optional[float],
+                          Optional[WorkCounts]]:
+        """Machine-model (breakdown, energy, counts) of one enqueued command.
+
+        The :class:`WorkCounts` actually priced (resident adjustment
+        applied) ride along so a capture can pin them on its
+        :class:`GraphNode` — downstream consumers (the serve engine's
+        bytes-per-step roofline) read traffic straight off the captured
+        schedule instead of re-deriving it.
 
         Operating-point audit (ISSUE 8): the config comes off the queue's
         device, so the breakdown is stamped with *that config's* clock
@@ -600,16 +607,16 @@ class CommandQueue:
         never from a config default.
         """
         if not self.profile or kernel.counts is None:
-            return None, None
+            return None, None, None
         counts = kernel.counts(**counts_params)
         if resident:
             counts = dataclasses.replace(counts, host_bytes=0.0)
         cfg = self.ctx.device.config
         if self.ctx.device.is_host:
             modeled = host_time(counts, cfg)
-            return modeled, host_energy_j(modeled)
+            return modeled, host_energy_j(modeled), counts
         modeled = egpu_time(cfg, counts, ndr)
-        return modeled, egpu_energy_j(cfg, modeled)
+        return modeled, egpu_energy_j(cfg, modeled), counts
 
     def _trace_event(self, ev: "Event") -> None:
         """Record one booked event as a span on this queue's modeled
@@ -705,7 +712,7 @@ class CommandQueue:
         dispatch = time.perf_counter() - t0
         outs = tuple(Buffer(r) for r in (raw if isinstance(raw, tuple) else (raw,)))
 
-        modeled, energy = self._model(kernel, ndr, cp, _resident)
+        modeled, energy, _counts = self._model(kernel, ndr, cp, _resident)
         deps = waits + self._implicit_deps()
         # Dataflow edges, mirroring capture's slot-producer tracking:
         # consuming another launch's output buffer is an ordering edge even
@@ -1045,6 +1052,11 @@ class GraphNode:
     kind: str = "kernel"
     #: bytes moved over the host bus (transfer nodes only)
     nbytes: float = 0.0
+    #: the WorkCounts this node was priced with at capture (resident
+    #: adjustment applied; ``None`` for sync/transfer nodes and unprofiled
+    #: queues) — lets consumers read modeled traffic straight off the
+    #: captured schedule (the serve engine's bytes/step roofline)
+    counts: Optional[WorkCounts] = None
 
     @property
     def is_transfer(self) -> bool:
@@ -1181,7 +1193,8 @@ class CommandGraph:
         out_slots = tuple(self._new_slot() for _ in out_avals)
         # Cost the node on the ENQUEUEING queue's device: a multi-queue
         # capture mixes host and e-GPU nodes, each with its own model.
-        modeled, energy = queue._model(kernel, ndr, counts_params, resident)
+        modeled, energy, counts = queue._model(kernel, ndr, counts_params,
+                                               resident)
 
         # Dependency edges: dataflow + wait_events + queue ordering.
         deps = set()
@@ -1196,7 +1209,7 @@ class CommandGraph:
             queue, GraphNode(kernel, call, in_slots, out_slots,
                              out_avals, modeled, energy,
                              n_items=int(args[0].data.size) if args else 0,
-                             deps=tuple(sorted(deps))))
+                             deps=tuple(sorted(deps)), counts=counts))
         for s in in_slots:
             self._slot_readers.setdefault(s, []).append(idx)
         for s in out_slots:

@@ -45,7 +45,22 @@ engine:
   their clock-gated leakage floor in :class:`ServeReport`'s honest fleet
   energy, and every launch re-audits its booked window price
   (``n_budget_violations`` must stay 0).  Composes with DVFS operating
-  points (:class:`~repro.core.OperatingPoint`, ``EGPUConfig.at``).
+  points (:class:`~repro.core.OperatingPoint`, ``EGPUConfig.at``);
+* the continuous-batching decode engine (ISSUE 9) —
+  :class:`DecodeEngine` serves autoregressive decode maxtext/JetStream
+  style: per-request ``prefill`` -> ``insert`` into a slot of a persistent
+  batched decode state resident on the engine's lane -> ``generate``
+  advancing ALL occupied slots one token per step in exactly ONE cached
+  ``CommandGraph`` launch (slot insertion is a donated-buffer update,
+  never a re-capture), bit-identical to whole-batch greedy decoding for
+  every cache family under staggered arrival.  ``Server(engine=...)``
+  opens the streaming front (``submit_decode`` / per-rid ``stream``
+  iterators — a finished request never blocks neighbors), the step cost
+  is priced by the machine model with a bytes-per-step roofline read off
+  the captured schedule (:class:`EngineRoofline`), and
+  :mod:`repro.serve.http` puts a dependency-free asyncio streaming HTTP
+  ingress in front of it.  Engine classes load lazily — pipeline-only
+  servers keep the model stack off their import path.
 """
 
 from .batching import (BucketBatcher, MicroBatch, ServeRequest,
@@ -63,6 +78,23 @@ from .server import (DECOMP_PERCENTILES, DECOMP_PHASES, PERCENTILES,
 from .sharded import (BATCH_AXIS, ShardedWorker, data_mesh, mesh_signature,
                       shard_breakdown)
 
+#: engine symbols resolved lazily (PEP 562): importing them pulls the model
+#: stack (repro.models / repro.train), which pipeline-only servers avoid
+_ENGINE_EXPORTS = ("DecodeEngine", "DecodeState", "EngineRoofline", "Prefix",
+                   "batch_axes", "engine_roofline", "graph_traffic")
+_HTTP_EXPORTS = ("EngineHTTPServer",)
+
+
+def __getattr__(name: str):
+    if name in _ENGINE_EXPORTS:
+        from . import engine
+        return getattr(engine, name)
+    if name in _HTTP_EXPORTS:
+        from . import http
+        return getattr(http, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+
+
 __all__ = [
     "BucketBatcher", "MicroBatch", "ServeRequest", "batched_stages", "pad_to",
     "GraphCache", "input_signature", "stage_signature", "stages_signature",
@@ -75,4 +107,5 @@ __all__ = [
     "AdmissionError", "Server", "ServeReport",
     "BATCH_AXIS", "ShardedWorker", "data_mesh", "mesh_signature",
     "shard_breakdown",
+    *_ENGINE_EXPORTS, *_HTTP_EXPORTS,
 ]

@@ -72,6 +72,12 @@ class MicroBatch:
     capacity: int
     pad_axis: int = 0
     crop_outputs: bool = True
+    #: input positions to DONATE on launch (``CommandGraph.launch_prefix``
+    #: ``donate=``): the serve engine marks its persistent decode-state
+    #: buffers here so every generate step reuses them in place instead of
+    #: allocating a fresh cache per token.  Donated inputs are consumed —
+    #: the submitter must replace them with the launch's outputs.
+    donate: Tuple[int, ...] = ()
 
     @property
     def n_requests(self) -> int:
@@ -187,6 +193,15 @@ class BucketBatcher:
         self.n_batches = 0
         self.padded_elements = 0   # request elements added purely by padding
         self.deadline_flushes = 0  # partial buckets launched by tick()
+
+    def mint_rid(self) -> int:
+        """Claim the next request id from the server-wide sequence.
+
+        The decode-engine path (``Server.submit_decode``) mints here too,
+        so engine and pipeline requests share ONE rid space — results,
+        sheds and trace trees can never collide across the two fronts.
+        """
+        return next(self._rid)
 
     # -- bucketing ----------------------------------------------------------
     def bucket_size_for(self, length: int) -> int:

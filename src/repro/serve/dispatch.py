@@ -266,7 +266,11 @@ class QueueWorker:
         overrides: it binds the launch to its mesh and scales the modeled
         breakdown by the shard count actually applied."""
         spike_s = self._fault_gate()
-        outs = graph.launch_prefix(batch.inputs, queue=self.queue)
+        # `batch.donate` (the serve engine's resident decode state) donates
+        # those input positions for in-place reuse; the empty default is
+        # the historical non-donating launch.
+        outs = graph.launch_prefix(batch.inputs, queue=self.queue,
+                                   donate=batch.donate)
         fused, energy = graph.fused_modeled()   # memoized: launch-invariant
         return outs, apply_spike(fused, spike_s), energy
 

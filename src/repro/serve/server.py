@@ -47,8 +47,12 @@ from __future__ import annotations
 import dataclasses
 import time
 from collections import OrderedDict, deque
-from typing import (Any, Callable, Deque, Dict, Optional, Sequence, Tuple,
-                    Union)
+from typing import (TYPE_CHECKING, Any, Callable, Deque, Dict, Iterator,
+                    Optional, Sequence, Tuple, Union)
+
+if TYPE_CHECKING:                      # annotation only — no runtime import
+    from .engine import DecodeEngine   # (keeps the model stack off pipeline-
+                                       # only servers' import path)
 
 import jax.numpy as jnp
 import numpy as np
@@ -168,6 +172,23 @@ class ServeReport:
     #: the configured caps (mW), ``None`` when serving uncapped
     power_budget_lane_mw: Optional[float] = None
     power_budget_fleet_mw: Optional[float] = None
+    # -- continuous-batching decode engine (ISSUE 9) ------------------------
+    #: generate steps launched (each ONE cached-graph launch over all slots)
+    engine_steps: int = 0
+    #: tokens emitted from occupied slots across those steps
+    engine_tokens: int = 0
+    #: modeled time split: prompt passes vs autoregressive generate steps
+    engine_prefill_s_modeled: float = 0.0
+    engine_decode_s_modeled: float = 0.0
+    #: steady-state decode throughput, tokens per modeled second
+    engine_tokens_per_s_modeled: float = 0.0
+    #: mean occupied-slot fraction across generate steps
+    engine_slot_occupancy: float = 0.0
+    #: modeled traffic of ONE captured generate step (bytes, summed off the
+    #: captured schedule's per-node WorkCounts — the roofline numerator)
+    engine_bytes_per_step: float = 0.0
+    #: share of the modeled step the D$-bandwidth floor explains
+    engine_mem_bound_fraction: float = 0.0
 
     def publish_metrics(self, registry: MetricsRegistry) -> MetricsRegistry:
         """Publish this report (and its per-queue / cache roll-ups) into a
@@ -244,6 +265,24 @@ class ServeReport:
         for phase, pcts in self.latency_decomposition_s.items():
             for p, v in pcts.items():
                 flame.set(v, phase=phase, quantile=f"p{p}")
+        # decode-engine telemetry (ISSUE 9): only published once the engine
+        # actually stepped, so pipeline-only servers add no empty series
+        if self.engine_steps:
+            ec = c("repro_engine_events_total",
+                   "decode-engine prefills/inserts/steps/tokens")
+            ec.set_total(self.engine_steps, kind="steps")
+            ec.set_total(self.engine_tokens, kind="tokens")
+            g("repro_engine_occupancy",
+              "mean occupied-slot fraction").set(self.engine_slot_occupancy)
+            g("repro_engine_tokens_per_s_modeled",
+              "modeled steady-state decode throughput").set(
+                self.engine_tokens_per_s_modeled)
+            g("repro_engine_bytes_per_step",
+              "modeled traffic of one generate step").set(
+                self.engine_bytes_per_step)
+            g("repro_engine_mem_bound_fraction",
+              "bandwidth-floor share of the modeled step").set(
+                self.engine_mem_bound_fraction)
         # same series GraphCache.publish_metrics writes — set_total is
         # idempotent, so publishing a report over a live cache never skews
         cache = registry.counter("repro_graph_cache_events_total",
@@ -280,6 +319,16 @@ class ServeReport:
                 f"{phase} {self.latency_decomposition_s[phase][p] * 1e3:.3f}"
                 for phase in DECOMP_PHASES
                 if phase in self.latency_decomposition_s) + " ms")
+        if self.engine_steps:
+            lines.append(
+                f"engine          {self.engine_tokens} tokens in "
+                f"{self.engine_steps} steps "
+                f"(occupancy {self.engine_slot_occupancy:.0%})  "
+                f"{self.engine_tokens_per_s_modeled:,.0f} tok/s modeled  "
+                f"prefill {self.engine_prefill_s_modeled * 1e3:.3f} ms / "
+                f"decode {self.engine_decode_s_modeled * 1e3:.3f} ms  "
+                f"{self.engine_bytes_per_step:,.0f} B/step "
+                f"({self.engine_mem_bound_fraction:.0%} mem-bound)")
         if (self.n_shed or self.n_deadline_violations
                 or self.deadline_flushes):
             lines.append(
@@ -382,7 +431,8 @@ class Server:
                  breaker_threshold: int = 3, breaker_cooldown: int = 8,
                  clock: Callable[[], float] = time.perf_counter,
                  tracer: Optional[Tracer] = None,
-                 power_budget: Optional[PowerBudget] = None):
+                 power_budget: Optional[PowerBudget] = None,
+                 engine: Optional["DecodeEngine"] = None):
         self.stages = tuple(stages)
         self.clock = clock
         self.max_pending = max_pending
@@ -420,6 +470,10 @@ class Server:
                 lanes.append(QueueWorker(
                     cfg, name=f"{i}:{w.name}", max_in_flight=max_in_flight,
                     fault_plan=fault_plan, clock=clock, tracer=tracer))
+        if not lanes and engine is not None:
+            # engine-only server: the engine's lane doubles as the (unused)
+            # dispatch lane, so accounting has a single source of truth
+            lanes = [engine.worker]
         self.dispatcher = MultiQueueDispatcher(
             lanes, failure_threshold=breaker_threshold,
             breaker_cooldown=breaker_cooldown, tracer=tracer,
@@ -464,6 +518,30 @@ class Server:
         self._t0: Optional[float] = None
         self._t_last: Optional[float] = None
         self._t_last_modeled: Optional[float] = None
+        # -- continuous-batching decode engine (ISSUE 9) --------------------
+        #: slot-based decode engine behind :meth:`submit_decode` /
+        #: :meth:`stream`; ``None`` keeps the server pipeline-only.  The
+        #: engine adopts the server's clock and tracer so both fronts share
+        #: one timeline and one trace.
+        self.engine = engine
+        if engine is not None:
+            if clock is not time.perf_counter:
+                engine.clock = clock
+                engine.worker.clock = clock
+            if tracer is not None:
+                if engine.tracer is None:
+                    engine.tracer = tracer
+                if engine.worker.tracer is None:
+                    engine.worker.tracer = tracer
+        self._estate = None                  # DecodeState, built on demand
+        #: accepted but not yet slotted: rid -> (prompt, max_new, deadline_s)
+        self._eng_waiting: "OrderedDict[int, Tuple[Any, int, Optional[float]]]" = OrderedDict()
+        #: slotted and generating: rid -> record dict (slot, remaining, ...)
+        self._eng_active: Dict[int, Dict[str, Any]] = {}
+        #: per-rid token queues not yet consumed by :meth:`stream` (LRU-
+        #: bounded to the metrics window like the results store, so
+        #: fire-and-forget clients can't leak token buffers forever)
+        self._eng_streams: "OrderedDict[int, Deque[int]]" = OrderedDict()
 
     # -- warm-up ------------------------------------------------------------
     def warmup(self, *example_arrays: Any) -> int:
@@ -556,9 +634,14 @@ class Server:
 
     def flush(self) -> None:
         """Force every pending request through: drain partial buckets, then
-        retire all in-flight launches."""
+        retire all in-flight launches (and, with an engine installed, run
+        every accepted decode request to completion)."""
         self._launch(self.batcher.drain())
         self._finalize(self.dispatcher.drain_all())
+        if self.engine is not None:
+            self._eng_pump()
+            while self._eng_active:
+                self._eng_step()
 
     # -- admission control --------------------------------------------------
     def _best_spr(self) -> Optional[float]:
@@ -677,6 +760,185 @@ class Server:
     @property
     def n_completed(self) -> int:
         return self._n_done
+
+    # -- decode-engine front (ISSUE 9) --------------------------------------
+    def submit_decode(self, prompt: Any, max_new: int,
+                      deadline: Optional[float] = None,
+                      priority: int = 0) -> int:
+        """Enqueue one autoregressive decode request on the engine front.
+
+        The request prefills into a free slot as soon as one exists (a
+        launch-time buffer update on the persistent decode state — never a
+        re-capture) and then rides the per-step ``generate`` launches with
+        every other occupied slot.  Read its tokens incrementally with
+        :meth:`stream` (which never blocks on neighbors) or all at once
+        via :meth:`result` after :meth:`flush`.
+        """
+        eng = self._require_engine()
+        prompt = jnp.asarray(prompt, jnp.int32).reshape(-1)
+        if max_new < 1:
+            raise ValueError(f"max_new must be >= 1, got {max_new}")
+        s = int(prompt.shape[0])
+        if s < 1 or s + max_new > eng.max_len:
+            raise ValueError(
+                f"prompt ({s} tokens) + max_new ({max_new}) must fit the "
+                f"engine's max_len={eng.max_len}")
+        now = self.clock()
+        if (self.admission and self.max_pending is not None
+                and len(self._eng_waiting) >= self.max_pending):
+            self.n_shed += 1
+            if self.tracer is not None:
+                self.tracer.instant("server", now, "shed-at-door",
+                                    reason="engine queue full",
+                                    priority=priority)
+            raise AdmissionError(
+                f"admission control shed decode request: "
+                f"{len(self._eng_waiting)} waiting >= "
+                f"max_pending={self.max_pending}")
+        rid = self.batcher.mint_rid()
+        if self.tracer is not None:
+            self.tracer.begin_request(
+                rid, now, priority=priority, prompt_len=s, max_new=max_new,
+                deadline_s=None if deadline is None else now + deadline)
+        if self._t0 is None:
+            self._t0 = now
+        self._eng_waiting[rid] = (
+            prompt, int(max_new),
+            None if deadline is None else now + float(deadline))
+        self._eng_streams[rid] = deque()
+        self._eng_pump()
+        return rid
+
+    def stream(self, rid: int) -> Iterator[int]:
+        """Per-request token iterator: yields ``rid``'s tokens as generate
+        steps produce them, driving the engine forward as needed.
+
+        A finished neighbor never blocks this stream, and exhausting it
+        leaves the request's full output in the results store.  Streaming
+        a shed rid raises :class:`AdmissionError` (loud, like
+        :meth:`result`)."""
+        self._require_engine()
+        while True:
+            if rid in self._shed:
+                raise AdmissionError(
+                    f"request {rid} was shed after acceptance: "
+                    f"{self._shed[rid]}")
+            q = self._eng_streams.get(rid)
+            while q:
+                yield q.popleft()
+            if rid not in self._eng_active and rid not in self._eng_waiting:
+                self._eng_streams.pop(rid, None)
+                return
+            self._eng_pump()
+            if self._eng_active:
+                self._eng_step()
+
+    def _require_engine(self) -> "DecodeEngine":
+        if self.engine is None:
+            raise RuntimeError(
+                "this server has no decode engine: construct it with "
+                "Server(..., engine=DecodeEngine(...))")
+        return self.engine
+
+    def _eng_pump(self) -> int:
+        """Admit waiting decode requests into free slots (prefill + insert).
+
+        Insertion is continuous batching's whole point: a freed slot takes
+        a fresh request while the other slots keep decoding — the next
+        generate step carries both, bit-identically for each."""
+        eng = self.engine
+        if self._estate is None:
+            self._estate = eng.init_state()
+        admitted = 0
+        while self._eng_waiting and self._estate.free_slots():
+            rid, (prompt, max_new, deadline_s) = \
+                self._eng_waiting.popitem(last=False)
+            slot = self._estate.free_slots()[0]
+            try:
+                prefix = eng.prefill(None, prompt, rid=rid)
+            except Exception as e:                   # injected fault etc.
+                self._eng_streams.pop(rid, None)
+                self._record_shed(rid, f"engine prefill failed: {e}")
+                continue
+            rec = {"slot": slot, "remaining": max_new - 1,
+                   "tokens": [int(prefix.token[0])],
+                   "deadline_s": deadline_s}
+            self._eng_streams[rid].append(rec["tokens"][0])
+            if rec["remaining"] <= 0:
+                self._eng_finish(rid, rec)
+            else:
+                eng.insert(prefix, self._estate, slot)
+                self._estate.rids[slot] = rid
+                self._eng_active[rid] = rec
+            admitted += 1
+        return admitted
+
+    def _eng_step(self) -> bool:
+        """ONE generate launch advancing every occupied slot one token;
+        finished requests free their slots and the pump refills them."""
+        eng = self.engine
+        if not self._eng_active:
+            return False
+        try:
+            self._estate, toks = eng.generate(None, self._estate)
+        except Exception as e:
+            # the persistent decode state is poisoned mid-flight (injected
+            # fault or a donated-buffer launch failure): shed every active
+            # rid LOUDLY and reset the state — no request is silently lost
+            for rid, rec in list(self._eng_active.items()):
+                self._eng_streams.pop(rid, None)
+                self._record_shed(rid, f"engine generate failed: {e}")
+            self._eng_active.clear()
+            self._estate = eng.init_state()
+            self._eng_pump()
+            return True
+        finished = []
+        for rid, rec in self._eng_active.items():
+            tok = int(toks[rec["slot"]])
+            rec["tokens"].append(tok)
+            rec["remaining"] -= 1
+            self._eng_streams[rid].append(tok)
+            if rec["remaining"] <= 0:
+                finished.append(rid)
+        for rid in finished:
+            rec = self._eng_active.pop(rid)
+            eng.release(self._estate, rec["slot"])
+            self._eng_finish(rid, rec)
+        if finished:
+            self._eng_pump()
+        return True
+
+    def _eng_finish(self, rid: int, rec: Dict[str, Any]) -> None:
+        """Book one completed decode request (results store, SLO counters,
+        trace terminal) — the engine twin of :meth:`_finalize`."""
+        now = self.clock()
+        t_done_modeled = self.engine.worker.modeled_busy_until
+        self._results[rid] = (np.asarray(rec["tokens"], np.int32),)
+        while len(self._eng_streams) > self._results_window:
+            self._eng_streams.popitem(last=False)
+        while len(self._results) > self._results_window:
+            old_rid, _ = self._results.popitem(last=False)
+            self._results_evicted += 1
+            self._evicted_upto = max(self._evicted_upto, old_rid)
+        violated = (rec["deadline_s"] is not None
+                    and t_done_modeled > rec["deadline_s"])
+        if violated:
+            self._n_deadline_violations += 1
+        else:
+            self._n_in_deadline += 1
+        self._n_done += 1
+        self._t_last = now if self._t_last is None else max(self._t_last, now)
+        self._t_last_modeled = (t_done_modeled
+                                if self._t_last_modeled is None
+                                else max(self._t_last_modeled,
+                                         t_done_modeled))
+        if self.tracer is not None:
+            if violated:
+                self.tracer.request_event(rid, t_done_modeled,
+                                          "deadline-miss",
+                                          deadline_s=rec["deadline_s"])
+            self.tracer.finish_request(rid, t_done_modeled, "result",
+                                       n_tokens=len(rec["tokens"]))
 
     # -- internals ----------------------------------------------------------
     def _launch(self, batches: Sequence[MicroBatch],
@@ -831,6 +1093,12 @@ class Server:
         fill = (self._n_done / (n_batches * self.batcher.max_batch)
                 if n_batches else 0.0)
         queues = self.dispatcher.stats()
+        if (self.engine is not None
+                and self.engine.worker not in self.dispatcher.workers):
+            # the engine's lane books its launches like any dispatcher
+            # lane, so fleet power/energy roll-ups stay honest (engine-only
+            # servers already list it as the dispatch lane)
+            queues = (*queues, self.engine.worker.stats())
         # batch-weighted mean utilization per mesh axis across sharded lanes
         axis_sum: Dict[str, float] = {}
         axis_n: Dict[str, int] = {}
@@ -857,6 +1125,18 @@ class Server:
                            * qs.idle_power_w for qs in queues)
                        if modeled_span > 0 else 0.0)
         fleet_energy = active_energy + idle_energy
+        engine_kwargs: Dict[str, Any] = {}
+        if self.engine is not None and self.engine.n_steps:
+            es = self.engine.stats()
+            engine_kwargs = dict(
+                engine_steps=int(es["n_steps"]),
+                engine_tokens=int(es["n_tokens"]),
+                engine_prefill_s_modeled=es["prefill_modeled_s"],
+                engine_decode_s_modeled=es["decode_modeled_s"],
+                engine_tokens_per_s_modeled=es["tokens_per_s_modeled"],
+                engine_slot_occupancy=es["occupancy"],
+                engine_bytes_per_step=es["bytes_per_step"],
+                engine_mem_bound_fraction=es["mem_bound_fraction"])
         return ServeReport(
             n_requests=self._n_done,
             n_batches=n_batches,
@@ -897,6 +1177,7 @@ class Server:
                                   else self.power_budget.lane_mw),
             power_budget_fleet_mw=(None if self.power_budget is None
                                    else self.power_budget.fleet_mw),
+            **engine_kwargs,
         )
 
     def publish_metrics(self, registry: Optional[MetricsRegistry] = None

@@ -6,9 +6,19 @@ repurposed for the ``repro.serve`` engine (ISSUE 2), this test inherited
 the coverage: a GQA transformer (plain KV cache), the MLA+MoE family
 (compressed latent cache) and the attention-free rwkv6 (O(1) state) all
 decode through one serving API.
+
+ISSUE 9 layers the continuous-batching :class:`DecodeEngine` on top and
+pins its invariants here: slot-based decode is bit-identical to whole-batch
+``greedy_generate`` for every cache family — including staggered
+mid-generation insertion and slot reuse — off exactly ONE cached decode
+graph (plus one prefill graph), whose step outputs carry no ``(B, vocab)``
+logits; the :class:`~repro.serve.Server` streaming front and the asyncio
+HTTP ingress deliver the same bits.
 """
 
+import asyncio
 import dataclasses
+import json
 
 import jax
 import jax.numpy as jnp
@@ -17,22 +27,32 @@ import pytest
 
 from repro.configs import ARCHS
 from repro.models import init_params, model_spec
+from repro.obs import Tracer
+from repro.serve import DecodeEngine, EngineHTTPServer, Server
 from repro.train.serve import greedy_generate
 
 BATCH, PROMPT, NEW = 2, 12, 4
 
+FAMILIES = ["qwen2.5-3b",       # GQA: plain KV cache
+            "deepseek-v2-236b",  # MLA latent cache
+            "rwkv6-3b"]          # O(1) recurrent state
 
-@pytest.mark.parametrize("arch", ["qwen2.5-3b",      # GQA: plain KV cache
-                                  "deepseek-v2-236b",  # MLA latent cache
-                                  "rwkv6-3b"])         # O(1) recurrent state
-def test_greedy_generate_cache_family(arch):
+
+def _setup(arch, batch, prompt_len, seed=1):
     cfg = ARCHS[arch].reduced()
     if cfg.n_experts:
         cfg = dataclasses.replace(cfg, capacity_factor=4.0)
     params = init_params(model_spec(cfg), jax.random.PRNGKey(0))
     prompts = jnp.asarray(
-        np.random.default_rng(1).integers(0, cfg.vocab, (BATCH, PROMPT)),
+        np.random.default_rng(seed).integers(0, cfg.vocab,
+                                             (batch, prompt_len)),
         jnp.int32)
+    return cfg, params, prompts
+
+
+@pytest.mark.parametrize("arch", FAMILIES)
+def test_greedy_generate_cache_family(arch):
+    cfg, params, prompts = _setup(arch, BATCH, PROMPT)
     out = greedy_generate(params, cfg, prompts, max_new=NEW,
                           max_len=PROMPT + NEW + 1)
     assert out.shape == (BATCH, NEW)
@@ -41,3 +61,154 @@ def test_greedy_generate_cache_family(arch):
     again = greedy_generate(params, cfg, prompts, max_new=NEW,
                             max_len=PROMPT + NEW + 1)
     np.testing.assert_array_equal(np.asarray(out), np.asarray(again))
+
+
+# -- ISSUE 9: the continuous-batching decode engine -------------------------
+
+@pytest.mark.parametrize("arch", FAMILIES)
+def test_engine_bit_identical_per_family(arch):
+    """Engine slots == whole-batch greedy_generate, bit for bit, for every
+    cache family — off exactly one prefill + one decode graph."""
+    cfg, params, prompts = _setup(arch, BATCH, PROMPT)
+    max_len = PROMPT + NEW + 1
+    ref = np.asarray(greedy_generate(params, cfg, prompts, max_new=NEW,
+                                     max_len=max_len))
+    eng = DecodeEngine(cfg, params, num_slots=BATCH, max_len=max_len)
+    state = eng.init_state()
+    for i in range(BATCH):
+        state = eng.insert(eng.prefill(None, prompts[i]), state, slot=i)
+    got = [np.asarray(state.tokens)]          # token 1 comes from prefill
+    for _ in range(NEW - 1):
+        state, toks = eng.generate(None, state)
+        got.append(toks)
+    np.testing.assert_array_equal(np.stack(got, axis=1), ref)
+    # zero re-capture: ONE prefill graph + ONE decode graph, period
+    assert eng.cache.misses == 2
+    assert eng.cache.hits == (BATCH - 1) + (NEW - 2)
+
+
+def test_engine_staggered_insert_and_slot_reuse():
+    """A request spliced into a freed slot mid-generation decodes the same
+    bits as the whole-batch reference, and never perturbs its neighbor."""
+    cfg, params, prompts = _setup("qwen2.5-3b", 3, PROMPT)
+    new_long = 6
+    max_len = PROMPT + new_long + 1
+    ref = np.asarray(greedy_generate(params, cfg, prompts, max_new=new_long,
+                                     max_len=max_len))
+    eng = DecodeEngine(cfg, params, num_slots=2, max_len=max_len)
+    state = eng.init_state()
+    # r0 (short) and r1 (long) start together in slots 0/1
+    state = eng.insert(eng.prefill(None, prompts[0]), state, slot=0)
+    state = eng.insert(eng.prefill(None, prompts[1]), state, slot=1)
+    out = {0: [int(state.tokens[0])], 1: [int(state.tokens[1])]}
+    for _ in range(2):
+        state, toks = eng.generate(None, state)
+        out[0].append(int(toks[0]))
+        out[1].append(int(toks[1]))
+    # r0 finishes after 3 tokens; its slot is reused by r2 mid-generation
+    state = eng.release(state, 0)
+    state = eng.insert(eng.prefill(None, prompts[2]), state, slot=0)
+    out[2] = [int(state.tokens[0])]
+    for _ in range(new_long - 3):
+        state, toks = eng.generate(None, state)
+        out[2].append(int(toks[0]))
+        out[1].append(int(toks[1]))
+    assert out[0] == list(ref[0][:3])
+    assert out[1] == list(ref[1])            # neighbor never perturbed
+    assert out[2] == list(ref[2][:new_long - 2])
+    assert eng.cache.misses == 2             # still just two graphs
+
+
+def test_engine_decode_graph_carries_no_logits():
+    """The per-step graph's outputs are tokens + cache only — no
+    ``(num_slots, vocab)`` logits ride the hot decode loop."""
+    cfg, params, prompts = _setup("qwen2.5-3b", 1, PROMPT)
+    eng = DecodeEngine(cfg, params, num_slots=2, max_len=PROMPT + 4)
+    state = eng.insert(eng.prefill(None, prompts[0]), eng.init_state(), 0)
+    state, _ = eng.generate(None, state)
+    assert eng.decode_graph is not None
+    for aval in eng.decode_graph.out_avals:
+        assert not (len(aval.shape) >= 2
+                    and aval.shape[0] == eng.num_slots
+                    and aval.shape[-1] == cfg.vocab_padded), (
+            f"decode step leaked a logits-shaped output {aval.shape}")
+    # roofline comes straight off the captured schedule
+    roof = eng.roofline()
+    assert roof is not None and roof.bytes_per_step > 0
+    assert 0.0 <= roof.mem_bound_fraction <= 1.0
+
+
+def test_server_engine_streaming_front():
+    """submit_decode/stream round-trip: bit-identical results, slot churn
+    across more requests than slots, exactly one terminal span per rid."""
+    cfg, params, prompts = _setup("qwen2.5-3b", 3, PROMPT)
+    max_len = PROMPT + NEW + 1
+    ref = np.asarray(greedy_generate(params, cfg, prompts, max_new=NEW,
+                                     max_len=max_len))
+    tracer = Tracer()
+    eng = DecodeEngine(cfg, params, num_slots=2, max_len=max_len)
+    srv = Server((), workers=(), engine=eng, tracer=tracer)
+    rids = [srv.submit_decode(prompts[i], max_new=NEW) for i in range(3)]
+    # streaming one rid to completion drives the other slots forward too
+    assert list(srv.stream(rids[0])) == [int(t) for t in ref[0]]
+    srv.flush()
+    for i, rid in enumerate(rids):
+        np.testing.assert_array_equal(np.asarray(srv.result(rid)[0]), ref[i])
+    rep = srv.report()
+    # decode steps produce NEW-1 tokens/request (token 1 is prefill's)
+    assert rep.engine_tokens == 3 * (NEW - 1)
+    assert rep.engine_steps > 0 and rep.engine_tokens_per_s_modeled > 0
+    assert 0.0 < rep.engine_slot_occupancy <= 1.0
+    assert "engine" in rep.summary()
+    # every accepted rid terminates in exactly one result/shed span
+    for rid in rids:
+        root = tracer.request_root(rid)
+        terms = [s for s in tracer.children(root)
+                 if s.name in ("result", "shed")]
+        assert len(terms) == 1
+
+
+def test_http_ingress_smoke():
+    """The asyncio front door streams the same bits over chunked HTTP."""
+    cfg, params, prompts = _setup("qwen2.5-3b", 2, PROMPT)
+    max_len = PROMPT + NEW + 1
+    ref = np.asarray(greedy_generate(params, cfg, prompts, max_new=NEW,
+                                     max_len=max_len))
+    eng = DecodeEngine(cfg, params, num_slots=2, max_len=max_len)
+    srv = Server((), workers=(), engine=eng)
+    front = EngineHTTPServer(srv)
+
+    async def post(host, port, prompt, max_new):
+        reader, writer = await asyncio.open_connection(host, port)
+        body = json.dumps({"prompt": [int(t) for t in prompt],
+                           "max_new": max_new}).encode()
+        writer.write(b"POST /generate HTTP/1.1\r\nHost: t\r\n"
+                     + f"Content-Length: {len(body)}\r\n\r\n".encode()
+                     + body)
+        await writer.drain()
+        head = await reader.readuntil(b"\r\n\r\n")
+        status = int(head.split(b" ")[1])
+        toks = []
+        while status == 200:
+            n = int((await reader.readuntil(b"\r\n")).strip(), 16)
+            if n == 0:
+                break
+            toks.append(int((await reader.readexactly(n + 2))[:-2]))
+        writer.close()
+        return status, toks
+
+    async def run():
+        host, port = await front.start()
+        try:
+            results = await asyncio.gather(
+                *[post(host, port, prompts[i], NEW) for i in range(2)])
+            bad = await post(host, port, [], NEW)    # empty prompt -> 400
+            return results, bad
+        finally:
+            await front.stop()
+
+    results, bad = asyncio.run(run())
+    for i, (status, toks) in enumerate(results):
+        assert status == 200
+        assert toks == [int(t) for t in ref[i]]
+    assert bad[0] == 400
