@@ -1,0 +1,66 @@
+"""repro.analyze — static analysis for captured graphs and repo invariants.
+
+Two passes, one package (ISSUE 10):
+
+* :mod:`repro.analyze.graph` — a capture-time **graph sanitizer**:
+  :func:`verify_graph` statically proves a captured
+  :class:`~repro.core.runtime.CommandGraph` free of RAW/WAR/WAW races,
+  use-after-donate hazards, buffer-flag violations, dependency cycles and
+  dead nodes, with node-naming :class:`Finding` diagnostics.  Reached as
+  ``CommandGraph.verify()`` (memoized per graph + donation, so warm serving
+  pays a dict lookup), automatically at every
+  :class:`~repro.serve.cache.GraphCache` miss, and — loudly, raising
+  :class:`GraphVerifyError` — at every capture under ``REPRO_VERIFY=1``.
+
+* :mod:`repro.analyze.lint` — an AST **invariant linter** enforcing the
+  ROADMAP's structural rules over ``src/repro`` (no builtin ``hash()``, no
+  wall clocks in modeled accounting, tracer guards on hot paths,
+  registry-only kernel construction, history-only bench writes).  CLI:
+  ``python -m repro.analyze src/repro`` (non-zero exit on findings; wired
+  beside pyflakes in CI).
+
+Worked example — the sanitizer catching a seeded race.  An out-of-order
+capture normally records a dataflow edge from producer to reader; strip it
+(exactly the bug a hand-rolled capture path could introduce) and
+``verify()`` names both nodes::
+
+    import dataclasses
+    from repro import tinycl
+
+    ctx = tinycl.Context(tinycl.Device())
+    q = tinycl.CommandQueue(ctx, out_of_order=True)
+    k = tinycl.Kernel("scale", executor=lambda x: (x * 2.0,))
+    buf = ctx.create_buffer(jnp.ones((8,)))
+    ndr = tinycl.NDRange((8,))
+
+    with q.capture() as graph:
+        ev = q.enqueue_nd_range(k, ndr, (buf,))          # producer
+        q.enqueue_nd_range(k, ndr, ev.outputs)           # reader (edge 0->1)
+
+    assert graph.verify() == ()                          # capture is clean
+
+    # seed the race: drop the reader's dependency edge
+    graph.nodes[1] = dataclasses.replace(graph.nodes[1], deps=())
+    graph._verify_memo.clear()
+    (f,) = graph.verify()
+    assert f.code == "raw-race"      # "#1:scale reads slot 1 with no
+                                     #  dependency path from its producer
+                                     #  #0:scale ..."
+
+Under ``REPRO_VERIFY=1`` the same finding raises :class:`GraphVerifyError`
+straight from the capture's ``__exit__`` / the graph-cache miss, so the
+whole test + benchmark suite doubles as a sanitizer sweep — and the
+``verified`` / ``findings`` counters surface in ``GraphCache.stats()``,
+:class:`~repro.serve.server.ServeReport` and the metrics registry
+(``repro_graph_sanitizer_total``).
+"""
+
+from .graph import Finding, GraphVerifyError, verify_graph
+from .lint import (KERNEL_CTOR_MODULES, MODELED_ACCOUNTING, LintFinding,
+                   lint_file, lint_paths, lint_source)
+
+__all__ = [
+    "Finding", "GraphVerifyError", "verify_graph",
+    "LintFinding", "lint_source", "lint_file", "lint_paths",
+    "MODELED_ACCOUNTING", "KERNEL_CTOR_MODULES",
+]

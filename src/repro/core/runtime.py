@@ -100,6 +100,7 @@ from __future__ import annotations
 
 import dataclasses
 import inspect
+import os
 import time
 import warnings
 import weakref
@@ -1057,6 +1058,12 @@ class GraphNode:
     #: queues) — lets consumers read modeled traffic straight off the
     #: captured schedule (the serve engine's bytes/step roofline)
     counts: Optional[WorkCounts] = None
+    #: slots whose logical buffer this (write/copy) node's output REBINDS —
+    #: the destination's previous value.  Slots are SSA, so without this
+    #: the overwrite relationship is gone after capture; the graph
+    #: sanitizer (repro.analyze) re-proves the WAR/WAW ordering edges the
+    #: capture added for it
+    overwrites: Tuple[int, ...] = ()
 
     @property
     def is_transfer(self) -> bool:
@@ -1113,6 +1120,13 @@ class CommandGraph:
         self._jit_cache: Dict[Tuple[Any, ...], Callable] = {}
         self._sealed = False
         self._fused_memo: Optional[Tuple[Optional[PhaseBreakdown], float]] = None
+        #: slot -> CL_MEM-style access flags of the buffer behind it, so
+        #: the sanitizer can re-check flag discipline after capture
+        self._slot_flags: Dict[int, str] = {}
+        #: verify() results per donation tuple — verification is a pure
+        #: function of the sealed capture, so warm serving pays one dict
+        #: lookup at most (and zero when REPRO_VERIFY is off)
+        self._verify_memo: Dict[Tuple[int, ...], Tuple[Any, ...]] = {}
 
     # -- capture ------------------------------------------------------------
     def __enter__(self) -> "CommandGraph":
@@ -1128,6 +1142,14 @@ class CommandGraph:
         # Only a capture body that completed cleanly yields a launchable
         # graph; an exception mid-capture leaves a truncated chain.
         self._sealed = exc_type is None
+        # REPRO_VERIFY=1 (repro.analyze): sanitize every capture at seal
+        # time, so a whole test/bench run doubles as a sanitizer sweep.
+        if (self._sealed and self.nodes
+                and os.environ.get("REPRO_VERIFY") == "1"):
+            findings = self.verify()
+            if findings:
+                from ..analyze.graph import GraphVerifyError
+                raise GraphVerifyError(findings)
 
     def join(self, queue: CommandQueue) -> "_GraphJoin":
         """Record enqueues on another queue into this capture.
@@ -1156,6 +1178,7 @@ class CommandGraph:
             slot = self._new_slot()
             self._buf_slot[id(buf)] = slot
             self._bufs_alive.append(buf)
+            self._slot_flags[slot] = buf.flags
             self._ext_slots.append(slot)
             self._ext_values.append(buf.data)
             self._ext_avals.append(
@@ -1214,6 +1237,7 @@ class CommandGraph:
             self._slot_readers.setdefault(s, []).append(idx)
         for s in out_slots:
             self._slot_producer[s] = idx
+            self._slot_flags[s] = "rw"      # kernel outputs: fresh rw slots
         outs = tuple(GraphBuffer(a, s) for a, s in zip(out_avals, out_slots))
         for b in outs:
             self._buf_slot[id(b)] = b.slot
@@ -1323,6 +1347,7 @@ class CommandGraph:
         modeled, energy = queue._model_transfer(nbytes)
 
         deps = set()
+        overwrites: Tuple[int, ...] = ()
         producer = self._slot_producer.get(in_slot)
         if producer is not None:
             deps.add(producer)
@@ -1337,6 +1362,7 @@ class CommandGraph:
                 if prev_producer is not None:
                     deps.add(prev_producer)
                 deps.update(self._slot_readers.get(prev_slot, ()))
+                overwrites = (prev_slot,)    # sanitizer re-proves the edges
         for ev in wait_events:
             deps.update(self._dep_nodes_of(ev))
         deps.update(self._queue_order_deps(queue))
@@ -1347,9 +1373,10 @@ class CommandGraph:
                              (out_slot,), (aval,), modeled, energy,
                              n_items=int(aval.size),
                              deps=tuple(sorted(deps)), kind=kind,
-                             nbytes=nbytes))
+                             nbytes=nbytes, overwrites=overwrites))
         self._slot_readers.setdefault(in_slot, []).append(idx)
         self._slot_producer[out_slot] = idx
+        self._slot_flags[out_slot] = out_flags
         if rebind is not None:
             self._buf_slot[id(rebind)] = out_slot
             self._bufs_alive.append(rebind)
@@ -1377,6 +1404,25 @@ class CommandGraph:
     def node_deps(self) -> Tuple[Tuple[int, ...], ...]:
         """Per-node dependency edges (indices into :attr:`nodes`)."""
         return tuple(n.deps for n in self.nodes)
+
+    def verify(self, donate: Sequence[int] = ()) -> Tuple[Any, ...]:
+        """Statically sanitize the captured DAG (see :mod:`repro.analyze`).
+
+        Returns the :class:`~repro.analyze.graph.Finding` tuple — empty for
+        a hazard-free capture.  ``donate`` lists donated external-input
+        positions (capture order), enabling the use-after-donate /
+        double-donation checks.  Results are memoized per donation tuple:
+        verification is a pure function of the sealed capture, so a warm
+        serving path re-verifying before every donating launch pays one
+        dict lookup, never a re-walk.
+        """
+        key = tuple(sorted(int(i) for i in donate))
+        memo = self._verify_memo.get(key)
+        if memo is None:
+            from ..analyze.graph import verify_graph
+            memo = verify_graph(self, donate=key)
+            self._verify_memo[key] = memo
+        return memo
 
     def total_modeled_s(self) -> float:
         return sum(n.modeled.total_s for n in self.nodes
@@ -1557,7 +1603,15 @@ class CommandGraph:
                 raise ValueError(
                     f"out_shardings must cover all {n_out} graph outputs "
                     f"(None for unconstrained), got {len(out_sh)}")
-        fn = self._fused(tuple(sorted(int(i) for i in donate)), in_sh, out_sh)
+        donate_key = tuple(sorted(int(i) for i in donate))
+        if donate_key and os.environ.get("REPRO_VERIFY") == "1":
+            # donation-aware sweep (memoized): a reader of a donated slot
+            # off the ordered path would observe reused storage
+            findings = self.verify(donate=donate_key)
+            if findings:
+                from ..analyze.graph import GraphVerifyError
+                raise GraphVerifyError(findings)
+        fn = self._fused(donate_key, in_sh, out_sh)
         t0 = time.perf_counter()
         with warnings.catch_warnings():
             # CPU backends warn that donated buffers were unused; donation

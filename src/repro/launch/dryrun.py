@@ -244,14 +244,14 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
         rules = (train_rules_for(cfg.param_count())
                  if shape.kind == "train" else SERVE_RULES)
 
-    t0 = time.time()
+    t0 = time.perf_counter()
     builder = BUILDERS[shape.kind]
     jitted, arg_structs, tcfg = builder(cfg, shape, mesh, rules)
     with mesh:
         lowered = jitted.lower(*arg_structs)
-        t_lower = time.time() - t0
+        t_lower = time.perf_counter() - t0
         compiled = lowered.compile()
-        t_compile = time.time() - t0 - t_lower
+        t_compile = time.perf_counter() - t0 - t_lower
 
     mem = compiled.memory_analysis()
     print(f"[{cell_id}] memory_analysis: {mem}", flush=True)   # proves fit

@@ -64,13 +64,13 @@ def train_loop(cfg, tcfg: TrainConfig, *, steps: int, global_batch: int,
             print(f"[train] restored step {start} from {ckpt_dir}")
 
     losses = []
-    t0 = time.time()
+    t0 = time.perf_counter()
     for step in range(start, steps):
         batch = {k: jnp.asarray(v) for k, v in data.batch_at(step).items()}
         state, metrics = step_fn(state, batch)
         losses.append(float(metrics["loss"]))
         if step % log_every == 0 or step == steps - 1:
-            dt = time.time() - t0
+            dt = time.perf_counter() - t0
             print(f"[train] step {step:5d} loss {losses[-1]:.4f} "
                   f"lr {float(metrics['lr']):.2e} "
                   f"gnorm {float(metrics['grad_norm']):.3f} ({dt:.1f}s)",

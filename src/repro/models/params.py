@@ -23,6 +23,7 @@ Logical axis vocabulary (used by the sharding rules):
 from __future__ import annotations
 
 import dataclasses
+import zlib
 from typing import Any, Optional, Tuple
 
 import jax
@@ -70,7 +71,11 @@ def init_params(spec_tree, key: jax.Array, dtype=jnp.float32):
     out = []
     for path, spec in leaves:
         name = jax.tree_util.keystr(path)
-        sub = jax.random.fold_in(key, hash(name) % (2 ** 31))
+        # CRC-32, never builtin hash(): hash() is salted per process
+        # (PYTHONHASHSEED), which would make param init differ across
+        # processes for the same seed (the repro.analyze no-builtin-hash
+        # rule; regression-pinned by a cross-process twin test)
+        sub = jax.random.fold_in(key, zlib.crc32(name.encode()) % (2 ** 31))
         if spec.init == "zeros":
             arr = jnp.zeros(spec.shape, dtype)
         elif spec.init == "ones":

@@ -33,12 +33,14 @@ from __future__ import annotations
 
 import functools
 import hashlib
+import os
 from collections import OrderedDict
 from typing import Any, Dict, Hashable, Optional, Sequence, Tuple
 
 import jax
 import numpy as np
 
+from ..analyze.graph import GraphVerifyError
 from ..core.apu import APU, Stage
 from ..core.ndrange import NDRange
 from ..core.runtime import CommandGraph
@@ -187,6 +189,13 @@ class GraphCache:
         self.hits = 0
         self.misses = 0
         self.evictions = 0
+        # capture-time sanitizer roll-up (repro.analyze): every miss's
+        # fresh capture is statically verified before admission.  Findings
+        # are counted always (they surface in ServeReport / metrics) and
+        # raise under REPRO_VERIFY=1 — a hit replays a verified graph, so
+        # the warm path never re-verifies.
+        self.verified = 0
+        self.findings = 0
 
     def __len__(self) -> int:
         return len(self._graphs)
@@ -247,6 +256,11 @@ class GraphCache:
             return graph, True
         self.misses += 1
         graph = apu.capture_pipeline(stages, inputs, ndranges)
+        findings = graph.verify()
+        self.verified += 1
+        self.findings += len(findings)
+        if findings and os.environ.get("REPRO_VERIFY") == "1":
+            raise GraphVerifyError(findings)
         self._graphs[key] = graph
         if len(self._graphs) > self.capacity:
             self._graphs.popitem(last=False)
@@ -256,7 +270,8 @@ class GraphCache:
     def stats(self) -> Dict[str, int]:
         return {"hits": self.hits, "misses": self.misses,
                 "evictions": self.evictions, "entries": len(self._graphs),
-                "capacity": self.capacity}
+                "capacity": self.capacity, "verified": self.verified,
+                "findings": self.findings}
 
     def publish_metrics(self, registry) -> None:
         """Publish the cache counters into a
@@ -270,6 +285,10 @@ class GraphCache:
                        "resident compiled graphs").set(len(self._graphs))
         registry.gauge("repro_graph_cache_capacity",
                        "configured cache capacity").set(self.capacity)
+        s = registry.counter("repro_graph_sanitizer_total",
+                             "capture-time graph sanitizer results")
+        s.set_total(self.verified, kind="verified")
+        s.set_total(self.findings, kind="findings")
 
     def clear(self) -> None:
         self._graphs.clear()

@@ -39,6 +39,7 @@ Engine invariants (pinned by ``tests/test_decode_serve.py``):
 from __future__ import annotations
 
 import dataclasses
+import os
 import time
 from typing import Any, Callable, Dict, List, Optional, Tuple
 
@@ -472,6 +473,18 @@ class DecodeEngine:
                     f"generate-step graph carries full-vocab outputs "
                     f"{[(a.shape, str(a.dtype)) for a in bad]}; "
                     "make_decode_step(return_logits=False) must elide them")
+            # donation-aware sanitizer sweep at capture time (repro.analyze):
+            # steady-state launches donate the cache-leaf slots, so prove
+            # NOW that every reader of those slots sits on the ordered path
+            # to the realize-then-drain boundary.  Memoized on the graph —
+            # the per-step donating launch re-checks for free.
+            donate = tuple(range(
+                2, 2 + len(jax.tree_util.tree_leaves(state.cache))))
+            findings = graph.verify(donate=donate)
+            self.cache.findings += len(findings)
+            if findings and os.environ.get("REPRO_VERIFY") == "1":
+                from ..analyze.graph import GraphVerifyError
+                raise GraphVerifyError(findings)
         self.decode_graph = graph
         return graph
 

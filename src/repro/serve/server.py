@@ -189,6 +189,13 @@ class ServeReport:
     engine_bytes_per_step: float = 0.0
     #: share of the modeled step the D$-bandwidth floor explains
     engine_mem_bound_fraction: float = 0.0
+    # -- capture-time graph sanitizer (ISSUE 10, repro.analyze) -------------
+    #: fresh captures statically verified at GraphCache miss time (a warm
+    #: server replays verified graphs and never re-verifies)
+    graphs_verified: int = 0
+    #: sanitizer findings across those verifications — MUST stay 0: every
+    #: finding is a capture-discipline bug (loud under REPRO_VERIFY=1)
+    sanitizer_findings: int = 0
 
     def publish_metrics(self, registry: MetricsRegistry) -> MetricsRegistry:
         """Publish this report (and its per-queue / cache roll-ups) into a
@@ -291,6 +298,10 @@ class ServeReport:
             cache.set_total(self.cache[kind], kind=kind)
         g("repro_graph_cache_entries",
           "resident compiled graphs").set(self.cache["entries"])
+        san = registry.counter("repro_graph_sanitizer_total",
+                               "capture-time graph sanitizer results")
+        san.set_total(self.graphs_verified, kind="verified")
+        san.set_total(self.sanitizer_findings, kind="findings")
         for qs in self.queues:
             qs.publish_metrics(registry)
         return registry
@@ -313,6 +324,10 @@ class ServeReport:
             f"{self.cache['evictions']} evictions "
             f"({self.cache['entries']}/{self.cache['capacity']} resident)",
         ]
+        if self.graphs_verified:
+            lines.append(
+                f"sanitizer       {self.graphs_verified} captures verified, "
+                f"{self.sanitizer_findings} findings")
         for p in sorted({p for pcts in self.latency_decomposition_s.values()
                          for p in pcts}):
             lines.append(f"flame p{p:<2d}      " + "  ".join(
@@ -1149,6 +1164,8 @@ class Server:
             padded_elements=self.batcher.padded_elements,
             queues=queues,
             cache=self.cache.stats(),
+            graphs_verified=self.cache.verified,
+            sanitizer_findings=self.cache.findings,
             mesh_utilization=mesh_util,
             results_evicted=self._results_evicted,
             n_shed=self.n_shed,

@@ -1,0 +1,437 @@
+"""repro.analyze (ISSUE 10): capture-time graph sanitizer + invariant linter.
+
+Pins the new contracts:
+
+* clean captures — in-order chains, out-of-order DAGs with barriers,
+  transfer overwrites, and one graph per built-in kernel family — verify
+  with ZERO findings;
+* every seeded hazard class (RAW/WAR/WAW race, use-after-donate,
+  flag violation, dependency cycle, dead node, double donation) yields its
+  expected named diagnostic;
+* ``REPRO_VERIFY=1`` raises :class:`GraphVerifyError` at capture seal and
+  at GraphCache admission; verification is memoized and perturbs nothing
+  (verify-on/off twins are bit-identical, modeled totals equal);
+* the AST linter flags each ROADMAP-rule violation (including the exact
+  pre-fix ``hash(name)`` form from models/params.py) and runs clean over
+  ``src/repro`` — the CI gate, as a test;
+* cross-process param-init determinism: ``init_params`` is invariant
+  under PYTHONHASHSEED (the CRC-32 satellite's regression).
+"""
+
+import dataclasses
+import os
+import pathlib
+import subprocess
+import sys
+from types import SimpleNamespace
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.analyze import (Finding, GraphVerifyError, lint_paths,
+                           lint_source, verify_graph)
+from repro.core import (APU, EGPU_16T, Buffer, CommandQueue, Context,
+                        Device, Kernel, NDRange, Program, Stage)
+from repro.core.program import BUILTIN_FAMILIES
+from repro.serve.cache import GraphCache
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+NDR = NDRange((8,), (8,))
+
+
+def _ctx():
+    return Context(Device(EGPU_16T))
+
+
+def _scale(name="scale", k=2.0):
+    return Kernel(name, executor=lambda x: (x * k,))
+
+
+def _x(shape=(8,), seed=0):
+    return jnp.asarray(np.random.default_rng(seed).standard_normal(shape),
+                       jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# duck-typed hazard graphs (hand-built: the runtime API refuses to record
+# these, which is exactly why the sanitizer re-derives everything)
+# ---------------------------------------------------------------------------
+def _node(name, in_slots=(), out_slots=(), deps=(), kind="kernel",
+          overwrites=()):
+    return SimpleNamespace(kernel=SimpleNamespace(name=name),
+                           in_slots=tuple(in_slots),
+                           out_slots=tuple(out_slots), deps=tuple(deps),
+                           kind=kind, overwrites=tuple(overwrites))
+
+
+def _graph(nodes, ext=(), flags=None, outputs=None):
+    g = SimpleNamespace(nodes=list(nodes), _ext_slots=list(ext),
+                        _slot_flags=dict(flags or {}), _ext_values=[])
+    if outputs is not None:
+        g._output_slots = lambda: tuple(outputs)
+    return g
+
+
+def _codes(findings):
+    return sorted(f.code for f in findings)
+
+
+# ---------------------------------------------------------------------------
+# clean graphs
+# ---------------------------------------------------------------------------
+def test_in_order_chain_verifies_zero_findings():
+    ctx = _ctx()
+    q = CommandQueue(ctx)
+    buf = ctx.create_buffer(_x())
+    with q.capture() as graph:
+        ev = q.enqueue_nd_range(_scale(), NDR, (buf,))
+        q.enqueue_nd_range(_scale("scale2", 3.0), NDR, ev.outputs)
+    assert graph.verify() == ()
+    # memoized: the same tuple object comes back, no re-walk
+    assert graph.verify() is graph.verify()
+
+
+def test_out_of_order_independent_nodes_are_clean():
+    ctx = _ctx()
+    q = CommandQueue(ctx, out_of_order=True)
+    a, b = ctx.create_buffer(_x(seed=1)), ctx.create_buffer(_x(seed=2))
+    with q.capture() as graph:
+        ea = q.enqueue_nd_range(_scale("a"), NDR, (a,))
+        eb = q.enqueue_nd_range(_scale("b"), NDR, (b,))
+        q.enqueue_nd_range(Kernel("sum", executor=lambda x, y: (x + y,)),
+                           NDR, (ea.outputs[0], eb.outputs[0]))
+    assert graph.verify() == ()
+
+
+def test_transfer_overwrite_capture_is_clean_and_carries_metadata():
+    ctx = _ctx()
+    q = CommandQueue(ctx, out_of_order=True)
+    dst = ctx.create_buffer(_x())
+    with q.capture() as graph:
+        ev = q.enqueue_nd_range(_scale(), NDR, (dst,))   # reads old value
+        q.enqueue_write_buffer(dst, _x(seed=3))          # WAR/WAW recorded
+        q.enqueue_nd_range(Kernel("sum", executor=lambda a, b: (a + b,)),
+                           NDR, (ev.outputs[0], dst))    # consumes both
+    assert graph.verify() == ()
+    write = next(n for n in graph.nodes if n.kind == "write")
+    assert write.overwrites == (0,)      # the destination's previous slot
+
+
+@pytest.mark.parametrize("family", sorted(BUILTIN_FAMILIES))
+def test_every_builtin_family_captures_clean(family):
+    rng = np.random.default_rng(7)
+    f32 = lambda *s: jnp.asarray(rng.standard_normal(s), jnp.float32)
+    inputs = {
+        "gemm": (f32(16, 32), f32(32, 8)),
+        "fir": (f32(256), f32(16)),
+        "delineate": (f32(256),),
+        "stockham_fft": (f32(128),),
+        "svm": (f32(8, 12), f32(16, 12), f32(16), jnp.float32(0.1)),
+        "mamba_scan": (f32(1, 32, 4), jnp.abs(f32(1, 32, 4)) * 0.1,
+                       -jnp.abs(f32(4, 2)), f32(1, 32, 2), f32(1, 32, 2),
+                       f32(4)),
+        "decode_attention": (f32(1, 2, 8), f32(1, 2, 16, 8),
+                             f32(1, 2, 16, 8)),
+    }[family]
+    kern = Program.build(EGPU_16T).create_kernel(family)
+    ctx = _ctx()
+    # unprofiled: the sweep checks capture structure, and each family's
+    # counts() takes family-specific problem sizes this test doesn't model
+    q = CommandQueue(ctx, profile=False)
+    bufs = tuple(Buffer(jnp.asarray(x)) for x in inputs)
+    with q.capture() as graph:
+        q.enqueue_nd_range(kern, NDR, bufs)
+    assert graph.verify() == ()
+
+
+# ---------------------------------------------------------------------------
+# seeded negatives: each hazard class produces its named diagnostic
+# ---------------------------------------------------------------------------
+def test_seeded_raw_race_names_both_nodes():
+    ctx = _ctx()
+    q = CommandQueue(ctx, out_of_order=True)
+    buf = ctx.create_buffer(_x())
+    with q.capture() as graph:
+        ev = q.enqueue_nd_range(_scale(), NDR, (buf,))
+        q.enqueue_nd_range(_scale("reader"), NDR, ev.outputs)
+    # strip the reader's dataflow edge — the bug a hand-rolled capture
+    # path could introduce on an out-of-order queue
+    graph.nodes[1] = dataclasses.replace(graph.nodes[1], deps=())
+    graph._verify_memo.clear()
+    (f,) = graph.verify()
+    assert f.code == "raw-race"
+    assert "#0:scale" in f.message and "#1:reader" in f.message
+    assert f.nodes == (0, 1)
+
+
+def test_seeded_war_race_on_transfer_overwrite():
+    ctx = _ctx()
+    q = CommandQueue(ctx, out_of_order=True)
+    dst = ctx.create_buffer(_x())
+    with q.capture() as graph:
+        ev = q.enqueue_nd_range(_scale(), NDR, (dst,))
+        eu = q.enqueue_nd_range(_scale("use"), NDR, ev.outputs)
+        q.enqueue_write_buffer(dst, _x(seed=3))
+        q.enqueue_nd_range(Kernel("sum", executor=lambda a, b: (a + b,)),
+                           NDR, (eu.outputs[0], dst))
+    assert graph.verify() == ()
+    # strip the write's WAR/WAW ordering edges
+    widx = next(i for i, n in enumerate(graph.nodes) if n.kind == "write")
+    graph.nodes[widx] = dataclasses.replace(graph.nodes[widx], deps=())
+    graph._verify_memo.clear()
+    codes = _codes(graph.verify())
+    assert "war-race" in codes
+
+
+def test_waw_race_dual_producers_and_unordered_overwrite():
+    # two producers of one slot
+    g = _graph([_node("p1", out_slots=(0,)), _node("p2", out_slots=(0,)),
+                _node("r", in_slots=(0,), out_slots=(1,), deps=(0, 1))],
+               outputs=(1,))
+    assert "waw-race" in _codes(verify_graph(g))
+    # overwrite unordered against the previous producer
+    g2 = _graph([_node("p", out_slots=(1,), in_slots=(0,)),
+                 _node("w", kind="write", in_slots=(2,), out_slots=(3,),
+                       overwrites=(1,)),
+                 _node("r", in_slots=(3,), out_slots=(4,), deps=(0, 1))],
+                ext=[0, 2], outputs=(4,))
+    assert "waw-race" in _codes(verify_graph(g2))
+
+
+def test_use_after_donate_reader_off_the_ordered_path():
+    # node "stray" reads donated ext slot 0 but nothing downstream of it is
+    # returned — unordered against the realize-then-drain boundary
+    g = _graph([_node("stray", in_slots=(0,), out_slots=(2,)),
+                _node("main", in_slots=(1,), out_slots=(3,))],
+               ext=[0, 1], outputs=(3,))
+    codes = _codes(verify_graph(g, donate=(0,)))
+    assert "use-after-donate" in codes
+    # same graph, nothing donated: a stray concurrent sink is legal
+    assert "use-after-donate" not in _codes(verify_graph(g))
+    # and a reader ON the ordered path is fine
+    g2 = _graph([_node("a", in_slots=(0,), out_slots=(1,)),
+                 _node("b", in_slots=(1,), out_slots=(2,), deps=(0,))],
+                ext=[0], outputs=(2,))
+    assert verify_graph(g2, donate=(0,)) == ()
+
+
+def test_double_donation_is_flagged():
+    g = _graph([_node("a", in_slots=(0, 1), out_slots=(2,))],
+               ext=[0, 1], outputs=(2,))
+    assert "double-donation" in _codes(verify_graph(g, donate=(0, 0)))
+    leaf = jnp.ones((4,))
+    g._ext_values = [leaf, leaf]
+    assert "double-donation" in _codes(verify_graph(g, donate=(0, 1)))
+
+
+def test_flag_violations_are_named():
+    # kernel reading a write-only slot
+    g = _graph([_node("k", in_slots=(0,), out_slots=(1,))],
+               ext=[0], flags={0: "w"}, outputs=(1,))
+    (f,) = verify_graph(g)
+    assert f.code == "flag-violation" and "write-only" in f.message
+    # write landing in a read-only buffer
+    g2 = _graph([_node("w", kind="write", in_slots=(0,), out_slots=(1,)),
+                 _node("k", in_slots=(1,), out_slots=(2,), deps=(0,))],
+                ext=[0], flags={1: "r"}, outputs=(2,))
+    codes = _codes(verify_graph(g2))
+    assert "flag-violation" in codes
+
+
+def test_dependency_cycle_is_reported():
+    g = _graph([_node("a", in_slots=(0,), out_slots=(1,), deps=(1,)),
+                _node("b", in_slots=(1,), out_slots=(2,), deps=(0,))],
+               ext=[0], outputs=(2,))
+    (f,) = verify_graph(g)
+    assert f.code == "dependency-cycle"
+    assert "#0:a" in f.message and "#1:b" in f.message
+
+
+def test_dead_node_is_reported():
+    # A dependent-free sink on a concurrent queue is a legitimate stream
+    # tail (live); dead is work whose only ordering dead-ends in a sync
+    # sink nobody else consumes.
+    ctx = _ctx()
+    q = CommandQueue(ctx, out_of_order=True)
+    a, b = ctx.create_buffer(_x(seed=1)), ctx.create_buffer(_x(seed=2))
+    with q.capture() as graph:
+        ev = q.enqueue_nd_range(_scale("dead"), NDR, (a,))
+        q.enqueue_marker(wait_events=[ev])              # sync dead end
+        q.enqueue_nd_range(_scale("live"), NDR, (b,))   # defines the output
+    (f,) = graph.verify()
+    assert f.code == "dead-node" and "#0:dead" in f.message
+    # the concurrent-sink twin (no marker) is clean: both launches are
+    # independent stream tails, only enqueue order picks the returned one
+    q2 = CommandQueue(ctx, out_of_order=True)
+    with q2.capture() as g2:
+        q2.enqueue_nd_range(_scale("t0"), NDR, (a,))
+        q2.enqueue_nd_range(_scale("t1"), NDR, (b,))
+    assert g2.verify() == ()
+
+
+# ---------------------------------------------------------------------------
+# REPRO_VERIFY wiring: loud at capture seal, at cache admission, at
+# donating launches — and zero perturbation either way
+# ---------------------------------------------------------------------------
+def test_env_mode_raises_at_capture_seal(monkeypatch):
+    monkeypatch.setenv("REPRO_VERIFY", "1")
+    ctx = _ctx()
+    q = CommandQueue(ctx, out_of_order=True)
+    buf = ctx.create_buffer(_x())
+    with pytest.raises(GraphVerifyError, match="raw-race"):
+        with q.capture() as graph:
+            ev = q.enqueue_nd_range(_scale(), NDR, (buf,))
+            q.enqueue_nd_range(_scale("reader"), NDR, ev.outputs)
+            # seed the race inside the capture body: __exit__ verifies
+            graph.nodes[1] = dataclasses.replace(graph.nodes[1], deps=())
+    # clean captures seal fine under the same env
+    q2 = CommandQueue(ctx)
+    with q2.capture() as g2:
+        q2.enqueue_nd_range(_scale(), NDR, (buf,))
+    assert g2.verify() == ()
+
+
+def test_graph_cache_verifies_every_miss_and_counts():
+    apu = APU(EGPU_16T)
+    cache = GraphCache(capacity=4)
+    stages = [Stage(_scale())]
+    x = _x()
+    _, hit = cache.get_or_capture(apu, stages, (x,))
+    assert not hit
+    _, hit = cache.get_or_capture(apu, stages, (x,))
+    assert hit
+    stats = cache.stats()
+    assert stats["verified"] == stats["misses"] == 1
+    assert stats["findings"] == 0
+
+
+def test_verify_on_off_twins_are_bit_identical(monkeypatch):
+    from repro.core.machine import WorkCounts
+
+    def run():
+        kern = Kernel("cs", executor=lambda x: (x * 2.0,),
+                      counts=lambda **kw: WorkCounts(
+                          ops=64.0, dcache_bytes=256.0, host_bytes=256.0,
+                          working_set=256.0))
+        apu = APU(EGPU_16T)
+        (out,), report = apu.offload([Stage(kern), Stage(kern)], (_x(),))
+        return np.asarray(out.data), report.egpu_fused.total_s
+
+    monkeypatch.delenv("REPRO_VERIFY", raising=False)
+    out_off, modeled_off = run()
+    monkeypatch.setenv("REPRO_VERIFY", "1")
+    out_on, modeled_on = run()
+    assert np.array_equal(out_off, out_on)
+    assert modeled_off == modeled_on
+
+
+def test_donating_launch_verifies_under_env(monkeypatch):
+    monkeypatch.setenv("REPRO_VERIFY", "1")
+    ctx = _ctx()
+    q = CommandQueue(ctx)
+    buf = ctx.create_buffer(_x())
+    with q.capture() as graph:
+        q.enqueue_nd_range(_scale(), NDR, (buf,))
+    (out,) = graph.launch(_x(seed=5), donate=(0,))
+    assert out.data.shape == (8,)
+
+
+# ---------------------------------------------------------------------------
+# invariant linter
+# ---------------------------------------------------------------------------
+def test_linter_flags_the_old_params_hash_form():
+    src = ("import jax\n"
+           "def init(key, name):\n"
+           "    return jax.random.fold_in(key, hash(name) % (2 ** 31))\n")
+    (f,) = lint_source(src, "src/repro/models/params.py")
+    assert f.rule == "no-builtin-hash" and f.line == 3
+
+
+def test_linter_wall_clock_rule():
+    assert [f.rule for f in lint_source(
+        "import time\nt = time.time()\n", "src/repro/launch/x.py")] \
+        == ["wall-clock"]
+    # perf_counter: banned in modeled-accounting modules only
+    assert [f.rule for f in lint_source(
+        "import time\nt = time.perf_counter()\n",
+        "src/repro/core/machine.py")] == ["wall-clock"]
+    assert lint_source("import time\nt = time.perf_counter()\n",
+                       "src/repro/serve/x.py") == []
+    # referencing (not calling) perf_counter is the injected-clock idiom
+    assert lint_source(
+        "import time\ndef f(clock=time.perf_counter):\n    return clock()\n",
+        "src/repro/core/machine.py") == []
+
+
+def test_linter_tracer_guard_rule():
+    bad = "class A:\n    def f(self):\n        self.tracer.instant('x')\n"
+    (f,) = lint_source(bad, "src/repro/serve/x.py")
+    assert f.rule == "tracer-guard"
+    good = ("class A:\n"
+            "    def f(self, rid):\n"
+            "        if self.tracer is not None and rid is not None:\n"
+            "            self.tracer.instant('x')\n"
+            "    def _trace_launch(self):\n"
+            "        self._tracer.span('y')\n")
+    assert lint_source(good, "src/repro/serve/x.py") == []
+
+
+def test_linter_registry_kernel_rule():
+    bad = "k = Kernel('adhoc', executor=f)\n"
+    (f,) = lint_source(bad, "src/repro/serve/x.py")
+    assert f.rule == "registry-kernels"
+    good = ("@kernel_family('g')\n"
+            "def build_kernel(cfg):\n"
+            "    return Kernel('g', executor=f)\n")
+    assert lint_source(good, "src/repro/kernels/g/ops.py") == []
+    # the batching adapter re-wraps an existing kernel: allowlisted
+    assert lint_source(bad, "src/repro/serve/batching.py") == []
+
+
+def test_linter_bench_history_rule():
+    bad = ("import json\n"
+           "OUT = 'BENCH_serve.json'\n"
+           "json.dump({}, open(OUT, 'w'))\n")
+    fs = lint_source(bad, "benchmarks/bench_x.py")
+    assert fs and all(f.rule == "bench-history" for f in fs)
+    assert lint_source(bad, "benchmarks/history.py") == []
+
+
+def test_linter_is_clean_over_src_repro():
+    findings = lint_paths([ROOT / "src" / "repro"])
+    assert findings == [], "\n".join(str(f) for f in findings)
+
+
+def test_cli_exits_clean_over_src_repro():
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.analyze", "src/repro"],
+        cwd=ROOT, capture_output=True, text=True,
+        env={**os.environ, "PYTHONPATH": "src"})
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    assert "clean" in proc.stdout
+
+
+# ---------------------------------------------------------------------------
+# satellite: cross-process param-init determinism (PYTHONHASHSEED twins)
+# ---------------------------------------------------------------------------
+def test_init_params_invariant_under_pythonhashseed(tmp_path):
+    code = (
+        "import sys\n"
+        "import jax\n"
+        "import numpy as np\n"
+        "from repro.models.params import ParamSpec, init_params\n"
+        "spec = {'w': ParamSpec((4, 4), ('embed', 'mlp')),\n"
+        "        'b': ParamSpec((4,), (None,))}\n"
+        "p = init_params(spec, jax.random.PRNGKey(0))\n"
+        "np.save(sys.argv[1], np.asarray(p['w']))\n")
+    outs = []
+    for seed in ("0", "4242"):
+        out = tmp_path / f"w_{seed}.npy"
+        env = {**os.environ, "PYTHONHASHSEED": seed, "PYTHONPATH": "src"}
+        subprocess.run([sys.executable, "-c", code, str(out)],
+                       cwd=ROOT, check=True, env=env)
+        outs.append(np.load(out))
+    # builtin hash() would differ between these processes; CRC-32 must not
+    assert np.array_equal(outs[0], outs[1])
